@@ -1,0 +1,127 @@
+"""Shared benchmark context: both synthetic benchmarks, all method results,
+and the serving-path latency harness (built once, reused by every table)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.evaluate import DEFAULT_METHODS, BenchmarkEvaluator, MethodResult
+from repro.data.benchmarks import Benchmark, make_metatool_like, make_toolbench_like
+from repro.embedding import transformer as tenc
+from repro.embedding.bag_encoder import pad_token_lists
+from repro.router.latency import LatencyStats, measure_latency
+
+# Paper numbers for side-by-side reporting (Tables 4/5/6).
+PAPER_NDCG5 = {
+    "metatool-like": {
+        "random": 0.298, "bm25": 0.595, "se": 0.869, "se+lexical": 0.816,
+        "oats-s1": 0.940, "oats-s2": 0.869, "oats-s3": 0.931,
+    },
+    "toolbench-like": {
+        "random": 0.692, "bm25": 0.853, "se": 0.834, "se+lexical": 0.854,
+        "oats-s1": 0.848, "oats-s2": 0.823, "oats-s3": 0.841,
+    },
+}
+PAPER_R1 = {
+    "metatool-like": {"random": 0.096, "bm25": 0.397, "se": 0.716, "oats-s1": 0.830,
+                      "oats-s2": 0.716, "oats-s3": 0.810, "se+lexical": 0.640},
+    "toolbench-like": {"random": 0.238, "bm25": 0.392, "se": 0.382, "oats-s1": 0.381,
+                       "oats-s2": 0.372, "oats-s3": 0.387, "se+lexical": 0.388},
+}
+
+
+@dataclasses.dataclass
+class BenchContext:
+    benches: Dict[str, Benchmark]
+    evaluators: Dict[str, BenchmarkEvaluator]
+    results: Dict[str, Dict[str, MethodResult]]
+    latency: Dict[str, Dict[str, LatencyStats]]
+
+    @classmethod
+    def build(
+        cls,
+        methods=DEFAULT_METHODS,
+        seed: int = 0,
+        fast: bool = False,
+        latency_requests: int = 120,
+        verbose: bool = True,
+    ) -> "BenchContext":
+        if fast:
+            benches = {
+                "metatool-like": make_metatool_like(seed, n_tools=120, n_queries=1000),
+                "toolbench-like": make_toolbench_like(seed, n_tools=600, n_queries=300),
+            }
+        else:
+            benches = {
+                "metatool-like": make_metatool_like(seed),
+                "toolbench-like": make_toolbench_like(seed),
+            }
+        evaluators, results = {}, {}
+        for name, b in benches.items():
+            t0 = time.time()
+            ev = BenchmarkEvaluator(b, seed=seed)
+            res = {m: ev.rankings_for(m) for m in methods}
+            evaluators[name], results[name] = ev, res
+            if verbose:
+                print(f"# built {name}: {time.time() - t0:.1f}s", flush=True)
+        ctx = cls(benches=benches, evaluators=evaluators, results=results, latency={})
+        ctx._measure_latencies(latency_requests, verbose)
+        return ctx
+
+    # ---- serving-path latency (Tables 1 & 6 protocol, §5.5) --------------
+    def _measure_latencies(self, n_requests: int, verbose: bool):
+        """Per-request p50/p99 over: MiniLM-shaped encoder forward (22M params,
+        the production encoder cost) + similarity + top-K (+ stage extras)."""
+        enc_params = tenc.init_encoder(jax.random.PRNGKey(0))
+        for name, bench in self.benches.items():
+            ev = self.evaluators[name]
+            test = bench.test_idx[:n_requests]
+            tokens = [bench.query_tokens[i] for i in test]
+            ids, mask = pad_token_lists(tokens, max_len=16)
+            stats: Dict[str, LatencyStats] = {}
+
+            def make_serve(table, extra=None):
+                def serve(i):
+                    q = np.asarray(
+                        tenc.encode(enc_params, ids[i : i + 1], mask[i : i + 1])
+                    )[0]
+                    sims = table @ q
+                    top = np.argpartition(-sims, 5)[:5]
+                    if extra is not None:
+                        extra(i, q, sims, top)
+                    return top
+
+                return serve
+
+            # BM25 (lexical only, no encoder forward)
+            bm = ev._bm25
+            stats["bm25"] = measure_latency(
+                lambda i: bm.scores([tokens[i]])[0].argsort()[-5:], len(test)
+            )
+            stats["se"] = measure_latency(make_serve(ev.tool_emb), len(test))
+            s1 = self.results[name]["oats-s1"].pipeline
+            stats["oats-s1"] = measure_latency(make_serve(s1.tool_table), len(test))
+            # S2/S3 pay the same encoder forward + the re-rank (+adapter) extras
+            q_embs = ev.query_emb[test]
+
+            def make_stage(pipe):
+                def serve(i):
+                    _ = np.asarray(
+                        tenc.encode(enc_params, ids[i : i + 1], mask[i : i + 1])
+                    )
+                    return pipe.rank([tokens[i]], 5, query_emb=q_embs[i : i + 1])
+
+                return serve
+
+            s2 = self.results[name]["oats-s2"].pipeline
+            stats["oats-s2"] = measure_latency(make_stage(s2), len(test))
+            s3 = self.results[name]["oats-s3"].pipeline
+            stats["oats-s3"] = measure_latency(make_stage(s3), len(test))
+            self.latency[name] = stats
+            if verbose:
+                p = {k: round(v.p50_ms, 2) for k, v in stats.items()}
+                print(f"# latency p50 ms ({name}): {p}", flush=True)

@@ -1,0 +1,58 @@
+"""Benchmark driver: one function per paper table (DESIGN.md §8).
+
+  PYTHONPATH=src python -m benchmarks.run [--fast] [--tables table4,fig4]
+
+Prints ``name,us_per_call,derived`` CSV. Selection tables use the full-scale
+synthetic benchmarks (199/4,287 and 2,413/600); latency rows measure the real
+CPU serving path including the 22M-parameter encoder forward. Roofline rows
+are emitted if experiments/dryrun/*.json exist (run repro.launch.dryrun
+first).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced benchmark scale")
+    ap.add_argument("--tables", default="all")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from benchmarks.context import BenchContext
+    from benchmarks.kernel_bench import kernel_rows
+    from benchmarks.roofline import roofline_rows
+    from benchmarks.tables import ALL_TABLES
+
+    want = list(ALL_TABLES) + ["roofline", "kernels"]
+    if args.tables != "all":
+        want = args.tables.split(",")
+
+    rows = []
+    needs_ctx = any(t in ALL_TABLES for t in want)
+    if needs_ctx:
+        t0 = time.time()
+        ctx = BenchContext.build(seed=args.seed, fast=args.fast)
+        print(f"# context built in {time.time() - t0:.1f}s", flush=True)
+        for tname in want:
+            if tname in ALL_TABLES:
+                rows.extend(ALL_TABLES[tname](ctx))
+    if "roofline" in want:
+        try:
+            rows.extend(roofline_rows())
+        except Exception as e:  # dry-run artifacts missing
+            print(f"# roofline skipped: {e}", file=sys.stderr)
+    if "kernels" in want:
+        rows.extend(kernel_rows())
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{json.dumps(r['derived'])}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Quickstart: OATS-S1 in ~40 lines (paper §4.1, Alg. 1).
+
+  PYTHONPATH=src python examples/quickstart.py
+
+Builds the MetaTool-scale synthetic benchmark, runs static-embedding
+retrieval, applies outcome-guided refinement offline, and shows the NDCG@5
+jump at identical serving cost.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.evaluate import BenchmarkEvaluator
+from repro.data.benchmarks import make_metatool_like
+
+bench = make_metatool_like(n_tools=199, n_queries=2000)
+ev = BenchmarkEvaluator(bench)
+
+se = ev.rankings_for("se")
+s1 = ev.rankings_for("oats-s1")
+
+print(f"benchmark: {bench.name} ({bench.n_tools} tools, {bench.n_queries} queries)")
+print(f"static embedding  NDCG@5 = {se.metrics['ndcg@5']:.3f}  R@1 = {se.metrics['recall@1']:.3f}")
+print(f"OATS-S1 refined   NDCG@5 = {s1.metrics['ndcg@5']:.3f}  R@1 = {s1.metrics['recall@1']:.3f}")
+gate = s1.pipeline.refine_result
+print(f"validation gate: accepted={bool(gate.accepted)} "
+      f"(val recall {float(gate.recall_before):.3f} -> {float(gate.recall_after):.3f})")
+print("serving path unchanged: embed query -> dot products -> top-K; "
+      "only the stored tool vectors differ (paper §4.1).")

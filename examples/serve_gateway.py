@@ -1,0 +1,18 @@
+"""Serve a small backend with batched requests through the OATS gateway.
+
+  PYTHONPATH=src python examples/serve_gateway.py
+
+Thin wrapper over the production launcher (launch/serve.py): synthetic tool
+DB -> OATS-S1 refinement -> table swap -> route batched requests -> backend
+prefill+decode -> outcome logging.
+"""
+from repro.launch.serve import main
+
+main([
+    "--arch", "hymba-1.5b", "--smoke",
+    "--stage", "oats-s1",
+    "--requests", "16",
+    "--max-new-tokens", "8",
+    "--n-tools", "199",
+    "--n-queries", "1500",
+])

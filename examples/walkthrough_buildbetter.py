@@ -1,0 +1,57 @@
+"""Appendix-A analogue: trace one opaque-description tool through Alg. 1.
+
+  PYTHONPATH=src python examples/walkthrough_buildbetter.py
+
+Finds the most opaque tool in the synthetic MetaTool benchmark (the
+`buildbetter` failure mode: a brand-heavy description far from the tool's
+function), shows the before/after candidate ranking for one of its test
+queries, and the similarity delta for the refined embedding — the geometry of
+paper Fig. 3.
+"""
+import numpy as np
+
+from repro.core.evaluate import BenchmarkEvaluator
+from repro.data.benchmarks import make_metatool_like
+
+bench = make_metatool_like(n_tools=199, n_queries=2000)
+ev = BenchmarkEvaluator(bench)
+s1 = ev.rankings_for("oats-s1")
+refined = s1.pipeline.tool_table
+
+# pick the most opaque tool with a test query that S1 actually corrects
+# (SE ranks it >1, the refined table ranks it 1 — a real `buildbetter` case)
+def _rank(table, qi, t):
+    cands = bench.candidates[qi]
+    sims = ev.query_emb[qi] @ table[cands].T
+    return int(np.argsort(-sims).tolist().index(list(cands).index(t))) + 1
+
+chosen = None
+for t in np.argsort(-bench.tool_opacity):
+    t = int(t)
+    for j in bench.test_idx:
+        if t in bench.relevant[j] and len(bench.relevant[j]) == 1:
+            if _rank(ev.tool_emb, j, t) > 1 and _rank(refined, j, t) == 1:
+                chosen, qi = t, j
+                break
+    if chosen is not None:
+        break
+assert chosen is not None
+
+q = ev.query_emb[qi]
+cands = bench.candidates[qi]
+before = {int(c): float(q @ ev.tool_emb[c]) for c in cands}
+after = {int(c): float(q @ refined[c]) for c in cands}
+
+print(f"tool #{chosen}: opacity={bench.tool_opacity[chosen]:.2f} "
+      f"(description is mostly brand/marketing tokens)")
+print(f"test query #{qi} (ground truth = tool {chosen})\n")
+print(f"{'tool':>6} {'before':>8} {'after':>8}  note")
+for c in sorted(cands, key=lambda c: -before[c]):
+    note = "<- ground truth" if c == chosen else ""
+    print(f"{c:>6} {before[c]:>8.3f} {after[c]:>8.3f}  {note}")
+
+rank_before = sorted(cands, key=lambda c: -before[c]).index(chosen) + 1
+rank_after = sorted(cands, key=lambda c: -after[c]).index(chosen) + 1
+print(f"\nrank: {rank_before} -> {rank_after}; "
+      f"sim delta for the correct tool: {after[chosen] - before[chosen]:+.3f}")
+print("The description text never changed — only the stored vector (Fig. 3).")

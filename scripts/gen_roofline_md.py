@@ -1,0 +1,32 @@
+"""Generate the §Roofline markdown table from experiments/dryrun/*.json."""
+import glob, json, os, sys
+
+rows = []
+for path in sorted(glob.glob("experiments/dryrun/*.json")):
+    base = os.path.basename(path)
+    if base.count("__") != 2:  # skip tagged (perf-iteration) records
+        continue
+    r = json.load(open(path))
+    if r["mesh"] != "single":
+        continue
+    rows.append(r)
+
+order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+rows.sort(key=lambda r: (r["arch"], order[r["shape"]]))
+from repro.configs import get_config
+from repro.launch.specs import SHAPES, variant_for_shape
+
+print("| arch | shape | compute (s) | memory (s) | collective (s) | dominant | MODEL_FLOPS | useful ratio | args GB/dev |")
+print("|---|---|---|---|---|---|---|---|---|")
+for r in rows:
+    shape = SHAPES[r["shape"]]
+    cfg = variant_for_shape(get_config(r["arch"]), shape)
+    factor = 6 if shape.kind == "train" else 2
+    d_tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mf = factor * cfg.active_param_count() * d_tokens
+    ratio = mf / max(r["per_device"]["flops"] * r["chips"], 1.0)
+    t = r["roofline"]
+    var = "" if r["variant"] == r["arch"] else " (+swa)"
+    print(f"| {r['arch']}{var} | {r['shape']} | {t['compute_s']:.4g} | {t['memory_s']:.4g} "
+          f"| {t['collective_s']:.4g} | **{t['dominant']}** | {mf:.2e} | {ratio:.3f} "
+          f"| {(r['per_device']['argument_bytes'] or 0)/1e9:.2f} |")

@@ -1,0 +1,4 @@
+"""repro: OATS (Outcome-Aware Tool Selection) — production semantic-router
+framework in JAX with multi-pod backend model pools."""
+
+__version__ = "0.1.0"

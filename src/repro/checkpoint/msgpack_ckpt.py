@@ -1,0 +1,85 @@
+"""Msgpack + zstd pytree checkpointing (no orbax in the offline container).
+
+Layout: a single `.ckpt` file = zstd-compressed msgpack of
+  {"meta": {...}, "tree": <nested dicts>, "arrays": [raw buffers]}
+Arrays are stored as (dtype, shape, index) leaves referencing the buffer
+list, so restore is zero-copy into numpy and device_put'able with any
+sharding. Step-numbered files + a LATEST pointer give atomic-ish rotation.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+import zstandard
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+_MARKER = "__array__"
+
+
+def _encode(tree: Any, buffers: list) -> Any:
+    if isinstance(tree, dict):
+        return {k: _encode(v, buffers) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return [_encode(v, buffers) for v in tree]
+    arr = np.asarray(tree)
+    buffers.append(arr.tobytes())
+    return {_MARKER: [str(arr.dtype), list(arr.shape), len(buffers) - 1]}
+
+
+def _decode(tree: Any, buffers: list) -> Any:
+    if isinstance(tree, dict):
+        if _MARKER in tree:
+            dtype, shape, idx = tree[_MARKER]
+            return np.frombuffer(buffers[idx], dtype=dtype).reshape(shape).copy()
+        return {k: _decode(v, buffers) for k, v in tree.items()}
+    if isinstance(tree, list):
+        return [_decode(v, buffers) for v in tree]
+    return tree
+
+
+def save_checkpoint(
+    directory: str, step: int, tree: Any, meta: Optional[Dict] = None
+) -> str:
+    os.makedirs(directory, exist_ok=True)
+    buffers: list = []
+    host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+    enc = _encode(host_tree, buffers)
+    payload = msgpack.packb(
+        {"meta": meta or {}, "step": step, "tree": enc, "arrays": buffers},
+        use_bin_type=True,
+    )
+    path = os.path.join(directory, f"step_{step:08d}.ckpt")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=3).compress(payload))
+    os.replace(tmp, path)  # atomic rotate
+    with open(os.path.join(directory, "LATEST"), "w") as f:
+        f.write(str(step))
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    p = os.path.join(directory, "LATEST")
+    if not os.path.exists(p):
+        return None
+    return int(open(p).read().strip())
+
+
+def restore_checkpoint(
+    directory: str, step: Optional[int] = None
+) -> Tuple[int, Any, Dict]:
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}.ckpt")
+    raw = zstandard.ZstdDecompressor().decompress(
+        open(path, "rb").read(), max_output_size=1 << 34
+    )
+    obj = msgpack.unpackb(raw, raw=False)
+    return obj["step"], _decode(obj["tree"], obj["arrays"]), obj["meta"]

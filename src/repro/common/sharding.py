@@ -1,0 +1,186 @@
+"""Logical-axis sharding rules (MaxText-style) for the backend pools.
+
+Params and activations are annotated with *logical* axes; `spec_for` resolves
+them against whatever mesh is active (single-pod ("data","model") or
+multi-pod ("pod","data","model")), so the same model code lowers on both.
+
+Rules (DESIGN.md §6):
+  batch    -> ("pod", "data")   data parallel
+  embed    -> ("data",)         FSDP: shard the d_model dim of weights
+  heads    -> ("model",)        tensor parallel attention
+  kv_heads -> ("model",)
+  ff       -> ("model",)        tensor parallel MLP
+  experts  -> ("model",)        expert parallel MoE
+  vocab    -> ("model",)        sharded logits/embedding table
+  ssm_heads-> ("model",)        sharded SSD heads
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "RULES",
+    "POLICIES",
+    "set_policy",
+    "get_policy",
+    "spec_for",
+    "named_sharding",
+    "logical_constraint",
+]
+
+_COMMON: dict[str, Tuple[str, ...]] = {
+    "seq": (),
+    "layers": (),
+    "stack": (),
+    "capacity": (),
+    "state": (),
+    "conv": (),
+    "image": (),
+    "codebooks": (),
+    "act_seq": (),  # sequence dim of the residual stream (SP shards it)
+    "kv_seq": (),  # sequence dim of the decode KV cache
+    None: (),
+}
+
+# Sharding policies (the §Perf hillclimb lever — DESIGN.md §6):
+#   tp      baseline: Megatron TP on heads/ff/experts + FSDP on d_model
+#   tp_sp   + sequence-parallel residual stream (all-reduce -> RS+AG)
+#   tp_kvs  + decode KV cache sharded over "model" on the SEQ dim (for archs
+#           whose kv_heads don't divide the model axis and would replicate)
+#   fsdp    ZeRO-3 only: batch over every axis, weights sharded on d_model,
+#           no tensor parallelism (small models: kills the TP all-reduces)
+#   tp_serve[_kvs]  decode/serving: weights resident (no FSDP gathers/token)
+POLICIES: dict[str, dict] = {
+    "tp": {
+        **_COMMON,
+        "batch": ("pod", "data"),
+        "embed": ("data",),
+        "heads": ("model",),
+        "kv_heads": ("model",),
+        "ff": ("model",),
+        "experts": ("model",),
+        "vocab": ("model",),
+        "ssm_heads": ("model",),
+        # uneven activation sharding (GSPMD pads) is an opt-in (§Perf): it
+        # shards batched attention for head counts like 56/25/24, but HURTS
+        # single-token decode against replicated caches (measured: musicgen
+        # decode collective 4.6 -> 292 ms when applied blindly)
+        "_relax_uneven": False,
+    },
+}
+POLICIES["tp_relaxed"] = {**POLICIES["tp"], "_relax_uneven": True}
+POLICIES["tp_sp"] = {**POLICIES["tp"], "act_seq": ("model",)}
+# serving: weights resident (TP-sharded only, NO data-axis FSDP) — decode
+# must not all-gather the weight shards every token
+POLICIES["tp_serve"] = {**POLICIES["tp"], "embed": ()}
+POLICIES["tp_serve_kvs"] = {**POLICIES["tp_serve"], "kv_seq": ("model",)}
+POLICIES["tp_kvs"] = {**POLICIES["tp"], "kv_seq": ("model",)}
+POLICIES["fsdp"] = {
+    **_COMMON,
+    "batch": ("pod", "data", "model"),
+    "embed": ("data", "model"),
+    "heads": (),
+    "kv_heads": (),
+    "ff": (),
+    "experts": (),
+    "vocab": (),
+    "ssm_heads": (),
+}
+
+RULES: dict[str, Tuple[str, ...]] = POLICIES["tp"]  # active policy (mutable)
+_ACTIVE = "tp"
+
+
+class set_policy:
+    """Context manager / setter switching the active sharding policy."""
+
+    def __init__(self, name: str):
+        global RULES, _ACTIVE
+        if name not in POLICIES:
+            raise KeyError(f"unknown sharding policy {name!r}; have {sorted(POLICIES)}")
+        self._prev = _ACTIVE
+        RULES = POLICIES[name]
+        _ACTIVE = name
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        global RULES, _ACTIVE
+        RULES = POLICIES[self._prev]
+        _ACTIVE = self._prev
+        return False
+
+
+def get_policy() -> str:
+    return _ACTIVE
+
+
+def spec_for(
+    axes: Sequence[Optional[str]],
+    mesh_axis_names: Sequence[str],
+    shape: Optional[Sequence[int]] = None,
+    mesh_axis_sizes: Optional[dict] = None,
+    relax_uneven: bool = False,
+) -> P:
+    """Resolve logical axes -> PartitionSpec for the given mesh.
+
+    When `shape` and `mesh_axis_sizes` are given, a mesh axis is dropped
+    (dimension replicated) if the dimension is not divisible by it — e.g.
+    kv_heads=8 cannot shard 16-way, so the KV projection replicates over
+    "model" while the q projection still shards. This keeps every assigned
+    architecture lowerable on the fixed production mesh without per-arch
+    sharding tables.
+    """
+    parts = []
+    used: set[str] = set()
+    for i, ax in enumerate(axes):
+        mesh_axes = []
+        dim = shape[i] if shape is not None else None
+        for a in RULES.get(ax, ()):
+            if a not in mesh_axis_names or a in used:
+                continue
+            if dim is not None and mesh_axis_sizes is not None:
+                size = mesh_axis_sizes[a]
+                divisor = size * int(np.prod([mesh_axis_sizes[m] for m in mesh_axes]) if mesh_axes else 1)
+                if dim % divisor != 0:
+                    # activations may shard unevenly (GSPMD pads, waste <=2x)
+                    # as long as every shard gets at least one row; params and
+                    # inputs stay strictly divisible (jit requirement)
+                    if not (relax_uneven and dim >= divisor):
+                        continue
+            mesh_axes.append(a)
+        used.update(mesh_axes)
+        if not mesh_axes:
+            parts.append(None)
+        elif len(mesh_axes) == 1:
+            parts.append(mesh_axes[0])
+        else:
+            parts.append(tuple(mesh_axes))
+    return P(*parts)
+
+
+def named_sharding(
+    mesh: Mesh, axes: Sequence[Optional[str]], shape: Optional[Sequence[int]] = None
+) -> NamedSharding:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return NamedSharding(mesh, spec_for(axes, mesh.axis_names, shape, sizes))
+
+
+def logical_constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """`with_sharding_constraint` by logical axes; no-op outside a mesh ctx."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or not mesh.axis_names:
+        return x
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    return jax.lax.with_sharding_constraint(
+        x,
+        spec_for(
+            axes, mesh.axis_names, x.shape, sizes,
+            relax_uneven=bool(RULES.get("_relax_uneven", False)),
+        ),
+    )

@@ -1,0 +1,1 @@
+"""The paper's contribution: OATS stages S1/S2/S3, baselines, evaluation."""

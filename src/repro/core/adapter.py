@@ -1,0 +1,195 @@
+"""OATS-S3: contrastive embedding adaptation (§4.3). 197,248 parameters.
+
+A residual two-layer projection head h(e) = normalize(e + W2 relu(W1 e + b1)
++ b2) with W2 zero-init, so the adapter starts as the identity and the small
+learning rate (1e-5, §5.5) moves it gently — preserving base-model quality
+and allowing instant rollback by disabling the head (the paper's deployment
+requirements). Trained with InfoNCE (Eq. 6, tau=0.07) over mined triplets
+(q, d+, hard d-), combining in-batch negatives with the mined hard negatives,
+early-stopped on validation NDCG@5.
+
+Output dimension is unchanged (384), so the adapter is a drop-in replacement:
+tool embeddings are recomputed once and the serving path is untouched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+from repro.metrics.retrieval import batched_ndcg_at_k
+
+__all__ = [
+    "AdapterConfig",
+    "init_adapter",
+    "adapter_apply",
+    "adapter_param_count",
+    "mine_triplets",
+    "train_adapter",
+]
+
+DIM = 384
+HIDDEN = 256  # [384, 256, 384] => 197,248 params (98,304+256+98,304+384)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterConfig:
+    lr: float = 1e-5
+    temperature: float = 0.07
+    epochs: int = 5
+    batch_size: int = 128
+    n_hard_negatives: int = 4
+    seed: int = 0
+    # beyond-paper knob: scale the residual branch during warmup
+    residual_scale: float = 1.0
+
+
+def init_adapter(key: jax.Array) -> dict:
+    k1, _ = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (DIM, HIDDEN), jnp.float32) * jnp.sqrt(2.0 / DIM),
+        "b1": jnp.zeros((HIDDEN,), jnp.float32),
+        # zero-init second layer => identity at step 0
+        "w2": jnp.zeros((HIDDEN, DIM), jnp.float32),
+        "b2": jnp.zeros((DIM,), jnp.float32),
+    }
+
+
+def adapter_param_count(params: dict) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def adapter_apply(params: dict, emb: jnp.ndarray, scale: float = 1.0) -> jnp.ndarray:
+    """emb: [..., 384] unit rows -> adapted unit rows (drop-in, same dim)."""
+    h = jax.nn.relu(emb @ params["w1"] + params["b1"])
+    out = emb + scale * (h @ params["w2"] + params["b2"])
+    return out / jnp.maximum(jnp.linalg.norm(out, axis=-1, keepdims=True), 1e-9)
+
+
+def mine_triplets(
+    query_emb: np.ndarray,  # [Q, D] train queries
+    tool_emb: np.ndarray,  # [T, D]
+    relevance: np.ndarray,  # [Q, T]
+    n_hard: int = 4,
+    candidate_mask: Optional[np.ndarray] = None,
+    seed: int = 0,
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Triplets (q_idx, pos_tool, [n_hard] hard_neg_tools) (§4.3).
+
+    Hard negatives = highest-similarity non-relevant tools for the query —
+    the functional boundaries static embeddings miss.
+    """
+    rng = np.random.default_rng(seed)
+    sims = query_emb @ tool_emb.T
+    if candidate_mask is not None:
+        sims = np.where(candidate_mask > 0, sims, -np.inf)
+    sims = np.where(relevance > 0, -np.inf, sims)  # negatives only
+    q_idx, pos, negs = [], [], []
+    hard_order = np.argsort(-sims, axis=1)[:, : max(n_hard * 3, n_hard)]
+    for j in range(query_emb.shape[0]):
+        rel = np.flatnonzero(relevance[j])
+        if len(rel) == 0:
+            continue
+        pool = hard_order[j]
+        pool = pool[np.isfinite(sims[j, pool])]
+        if len(pool) < n_hard:
+            continue
+        for t in rel:
+            q_idx.append(j)
+            pos.append(t)
+            negs.append(rng.choice(pool, size=n_hard, replace=False))
+    return (
+        np.array(q_idx, dtype=np.int64),
+        np.array(pos, dtype=np.int64),
+        np.stack(negs).astype(np.int64) if negs else np.zeros((0, n_hard), np.int64),
+    )
+
+
+def _info_nce(params, q, pos, negs, temperature, scale):
+    """InfoNCE (Eq. 6) with in-batch + mined hard negatives.
+
+    q: [B, D]; pos: [B, D]; negs: [B, H, D].
+    """
+    qa = adapter_apply(params, q, scale)
+    pa = adapter_apply(params, pos, scale)
+    na = adapter_apply(params, negs.reshape(-1, negs.shape[-1]), scale).reshape(
+        negs.shape
+    )
+    pos_logit = (qa * pa).sum(-1, keepdims=True)  # [B, 1]
+    inbatch = qa @ pa.T  # [B, B] — off-diagonal are in-batch negatives
+    mask = jnp.eye(qa.shape[0], dtype=bool)
+    inbatch = jnp.where(mask, -1e30, inbatch)
+    hard = jnp.einsum("bd,bhd->bh", qa, na)  # [B, H]
+    logits = jnp.concatenate([pos_logit, inbatch, hard], axis=1) / temperature
+    return -jnp.mean(jax.nn.log_softmax(logits, axis=1)[:, 0])
+
+
+def train_adapter(
+    query_emb: np.ndarray,
+    tool_emb: np.ndarray,
+    triplets: tuple[np.ndarray, np.ndarray, np.ndarray],
+    val_query_emb: np.ndarray,
+    val_relevance: np.ndarray,
+    val_candidate_mask: Optional[np.ndarray] = None,
+    config: AdapterConfig = AdapterConfig(),
+) -> tuple[dict, dict]:
+    """InfoNCE training with early stopping on validation NDCG@5 (§5.5)."""
+    key = jax.random.PRNGKey(config.seed)
+    key, ik = jax.random.split(key)
+    params = init_adapter(ik)
+    opt = optim.adamw(config.lr)
+    opt_state = opt.init(params)
+
+    q_idx, pos_idx, neg_idx = triplets
+    n = len(q_idx)
+    qe = jnp.asarray(query_emb)
+    te = jnp.asarray(tool_emb)
+    vqe = jnp.asarray(val_query_emb)
+    vrel = jnp.asarray(val_relevance)
+    vmask = None if val_candidate_mask is None else jnp.asarray(val_candidate_mask)
+
+    @jax.jit
+    def step(params, opt_state, qb, pb, nb):
+        loss, grads = jax.value_and_grad(_info_nce)(
+            params, qb, pb, nb, config.temperature, config.residual_scale
+        )
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return optim.apply_updates(params, updates), opt_state, loss
+
+    @jax.jit
+    def val_ndcg(params):
+        qa = adapter_apply(params, vqe, config.residual_scale)
+        ta = adapter_apply(params, te, config.residual_scale)
+        sims = qa @ ta.T
+        if vmask is not None:
+            sims = jnp.where(vmask > 0, sims, -1e30)
+        _, topk = jax.lax.top_k(sims, 5)
+        return batched_ndcg_at_k(topk, vrel)
+
+    best = {"params": params, "ndcg": float(val_ndcg(params)), "epoch": -1}
+    history = {"loss": [], "val_ndcg": [best["ndcg"]]}
+    bs = min(config.batch_size, max(n, 1))
+    if n == 0:
+        return params, history
+    steps_per_epoch = max(n // bs, 1)
+    for epoch in range(config.epochs):
+        key, pk = jax.random.split(key)
+        perm = np.asarray(jax.random.permutation(pk, n))
+        ep_loss = 0.0
+        for s in range(steps_per_epoch):
+            rows = perm[s * bs : (s + 1) * bs]
+            qb = qe[q_idx[rows]]
+            pb = te[pos_idx[rows]]
+            nb = te[neg_idx[rows].reshape(-1)].reshape(len(rows), -1, DIM)
+            params, opt_state, loss = step(params, opt_state, qb, pb, nb)
+            ep_loss += float(loss)
+        history["loss"].append(ep_loss / steps_per_epoch)
+        ndcg = float(val_ndcg(params))
+        history["val_ndcg"].append(ndcg)
+        if ndcg > best["ndcg"]:
+            best = {"params": params, "ndcg": ndcg, "epoch": epoch}
+    return best["params"], history

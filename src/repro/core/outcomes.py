@@ -1,0 +1,64 @@
+"""Outcome-log machinery (Alg. 1 steps 1-2).
+
+From production logs (here: retrieval against ground truth on the train split)
+we build, per tool, the positive query set Q+ and the hard-negative set Q-.
+Represented densely as [Q_train, T] masks so the whole of Alg. 1 jits.
+
+`positives` semantics (paper App. A.3 vs Alg.1 line 10): the walkthrough
+collects *all* ground-truth queries for the tool as Q+, while Alg. 1's
+pseudo-code keeps only those that were also retrieved. We default to the
+walkthrough behaviour ("ground_truth") — a missed ground-truth query is
+precisely the signal that should pull an opaque tool toward its users — and
+expose "retrieved" for the strict-pseudocode ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OutcomeLogs", "collect_outcomes"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OutcomeLogs:
+    pos_mask: jnp.ndarray  # [Q, T] 1 where q in Q_i^+
+    neg_mask: jnp.ndarray  # [Q, T] 1 where q in Q_i^- (retrieved, not relevant)
+    retrieved: jnp.ndarray  # [Q, K] top-K indices under current embeddings
+
+    @property
+    def pos_counts(self) -> jnp.ndarray:  # [T]
+        return self.pos_mask.sum(axis=0)
+
+    @property
+    def neg_counts(self) -> jnp.ndarray:  # [T]
+        return self.neg_mask.sum(axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "positives"))
+def collect_outcomes(
+    query_emb: jnp.ndarray,  # [Q, D] train queries
+    tool_emb: jnp.ndarray,  # [T, D] current tool table
+    relevance: jnp.ndarray,  # [Q, T] binary ground truth
+    candidate_mask: jnp.ndarray | None = None,  # [Q, T] or None
+    k: int = 5,
+    positives: str = "ground_truth",
+) -> OutcomeLogs:
+    sims = query_emb @ tool_emb.T
+    if candidate_mask is not None:
+        sims = jnp.where(candidate_mask > 0, sims, -1e30)
+    k = min(k, sims.shape[1])  # tool sets smaller than K
+    _, topk = jax.lax.top_k(sims, k)  # [Q, K]
+    # retrieved_mask[q, t] = 1 iff t in topk(q)
+    retrieved_mask = jnp.zeros_like(relevance).at[
+        jnp.arange(sims.shape[0])[:, None], topk
+    ].set(1.0)
+    if positives == "retrieved":
+        pos_mask = retrieved_mask * relevance
+    else:  # "ground_truth": every labelled-relevant train query counts
+        pos_mask = relevance
+    neg_mask = retrieved_mask * (1.0 - relevance)  # hard negatives only
+    return OutcomeLogs(pos_mask=pos_mask, neg_mask=neg_mask, retrieved=topk)

@@ -1,0 +1,58 @@
+"""Serving-path retrieval: embed query -> similarity -> top-K (Eq. 2).
+
+The hot loop the paper constrains to single-digit milliseconds. Two
+implementations share one interface:
+
+  * `rank_dense` — jnp matmul + argsort (the CPU production path; also the
+    oracle for the Pallas kernel);
+  * `repro.kernels.topk_sim.ops.topk_sim` — the TPU-native fused
+    similarity+top-K Pallas kernel for pod-co-located routers (DESIGN.md §4).
+
+Candidate masking supports MetaTool-style per-query candidate subsets.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["similarities", "rank_dense", "topk_dense"]
+
+NEG_INF = -1e30
+
+
+def similarities(query_emb: jnp.ndarray, tool_emb: jnp.ndarray) -> jnp.ndarray:
+    """Cosine similarity assuming unit-normalized rows. [Q,D]x[T,D] -> [Q,T]."""
+    return query_emb @ tool_emb.T
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_dense(
+    query_emb: jnp.ndarray,
+    tool_emb: jnp.ndarray,
+    k: int,
+    candidate_mask: jnp.ndarray | None = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k (scores, indices) per query. candidate_mask: [Q,T] {0,1} or None."""
+    sims = similarities(query_emb, tool_emb)
+    if candidate_mask is not None:
+        sims = jnp.where(candidate_mask > 0, sims, NEG_INF)
+    return jax.lax.top_k(sims, k)
+
+
+def rank_dense(
+    query_emb: np.ndarray,
+    tool_emb: np.ndarray,
+    k: int,
+    candidate_mask: np.ndarray | None = None,
+) -> np.ndarray:
+    """Numpy convenience wrapper returning indices only."""
+    _, idx = topk_dense(
+        jnp.asarray(query_emb),
+        jnp.asarray(tool_emb),
+        k,
+        None if candidate_mask is None else jnp.asarray(candidate_mask),
+    )
+    return np.asarray(idx)

@@ -1,0 +1,74 @@
+"""Frozen bag-of-word-vectors encoder (the production router's e(.), §5.5).
+
+Stands in for all-MiniLM-L6-v2: mean-pool word vectors, L2-normalize. The
+encoder is deliberately *frozen* — OATS-S1 changes only the stored tool
+vectors, never the encoder (paper §4.1), and OATS-S3 composes a trainable
+adapter head on top of this encoder's output (paper §4.3).
+
+Both a ragged (list-of-token-arrays) numpy path — used by the offline
+benchmark/evaluation code — and a padded jnp path (used inside jitted serving
+and training code) are provided and agree exactly.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.embedding.vocab import Vocab
+
+__all__ = ["BagEncoder"]
+
+
+class BagEncoder:
+    def __init__(self, vocab: Vocab):
+        self.vocab = vocab
+        self.word_vecs = vocab.word_vecs  # [V, 384] float32
+        self._word_vecs_j = jnp.asarray(self.word_vecs)
+
+    @property
+    def dim(self) -> int:
+        return self.word_vecs.shape[1]
+
+    # ---- ragged numpy path (offline) ------------------------------------
+    def encode(self, token_lists: Sequence[np.ndarray]) -> np.ndarray:
+        out = np.zeros((len(token_lists), self.dim), dtype=np.float32)
+        for i, toks in enumerate(token_lists):
+            if len(toks) == 0:
+                continue
+            v = self.word_vecs[np.asarray(toks)].mean(axis=0)
+            n = np.linalg.norm(v)
+            out[i] = v / max(n, 1e-9)
+        return out
+
+    def encode_one(self, tokens: np.ndarray) -> np.ndarray:
+        return self.encode([tokens])[0]
+
+    # ---- padded jnp path (jittable, used in the serving hot path) -------
+    def encode_padded(self, ids: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+        """ids: [B, L] int32, mask: [B, L] {0,1}. Returns [B, 384] unit rows."""
+        vecs = jnp.take(self._word_vecs_j, ids, axis=0)  # [B, L, D]
+        m = mask[..., None].astype(vecs.dtype)
+        summed = (vecs * m).sum(axis=1)
+        count = jnp.maximum(m.sum(axis=1), 1.0)
+        mean = summed / count
+        norm = jnp.maximum(jnp.linalg.norm(mean, axis=-1, keepdims=True), 1e-9)
+        return mean / norm
+
+
+def pad_token_lists(
+    token_lists: Sequence[np.ndarray], max_len: int | None = None
+) -> tuple[np.ndarray, np.ndarray]:
+    """Pack ragged token lists into (ids, mask) for the padded path."""
+    if max_len is None:
+        max_len = max((len(t) for t in token_lists), default=1)
+        max_len = max(max_len, 1)
+    ids = np.zeros((len(token_lists), max_len), dtype=np.int32)
+    mask = np.zeros((len(token_lists), max_len), dtype=np.int32)
+    for i, toks in enumerate(token_lists):
+        n = min(len(toks), max_len)
+        ids[i, :n] = np.asarray(toks)[:n]
+        mask[i, :n] = 1
+    return ids, mask

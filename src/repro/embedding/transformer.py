@@ -1,0 +1,114 @@
+"""MiniLM-shaped sentence encoder in pure JAX (all-MiniLM-L6-v2 geometry).
+
+6 layers, d_model=384, 12 heads, d_ff=1536, mean-pool + L2 — ~22M parameters
+with a 30k vocab, matching the paper's production encoder (§5.5, Table 1).
+
+No pretrained weights exist offline, so semantic evaluations use the frozen
+bag encoder (DESIGN.md §2); *this* module exists for (a) honest latency
+measurements — per-request cost is weight-independent, so Table 1/6 numbers
+include a real 22M-parameter CPU forward pass — and (b) the Stage-3
+trainable-encoder path and router integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["EncoderConfig", "init_encoder", "encode", "encoder_param_count"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    vocab_size: int = 30522
+    n_layers: int = 6
+    d_model: int = 384
+    n_heads: int = 12
+    d_ff: int = 1536
+    max_len: int = 256
+    dtype: str = "float32"  # CPU routers run fp32
+
+
+def init_encoder(key: jax.Array, cfg: EncoderConfig = EncoderConfig()) -> dict:
+    keys = jax.random.split(key, 8)
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    L = cfg.n_layers
+
+    def norm(k, *shape, scale=None):
+        scale = scale if scale is not None else (1.0 / np.sqrt(shape[-2]))
+        return jax.random.normal(k, shape, jnp.float32) * scale
+
+    return {
+        "tok_emb": jax.random.normal(keys[0], (v, d), jnp.float32) * 0.02,
+        "pos_emb": jax.random.normal(keys[1], (cfg.max_len, d), jnp.float32) * 0.02,
+        # stacked per-layer weights: scan-friendly
+        "wqkv": norm(keys[2], L, d, 3 * d),
+        "wo": norm(keys[3], L, d, d),
+        "w1": norm(keys[4], L, d, f),
+        "w2": norm(keys[5], L, f, d),
+        "ln1": jnp.ones((L, d), jnp.float32),
+        "ln2": jnp.ones((L, d), jnp.float32),
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+
+
+def encoder_param_count(params: dict) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def _layer_norm(x, scale):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-6) * scale
+
+
+def _block(x, mask, wqkv, wo, w1, w2, ln1, ln2, n_heads):
+    b, s, d = x.shape
+    h = _layer_norm(x, ln1)
+    qkv = h @ wqkv  # [B, S, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    hd = d // n_heads
+    q = q.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(hd)  # [B, H, S, S]
+    att = jnp.where(mask[:, None, None, :] > 0, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = (att @ v).transpose(0, 2, 1, 3).reshape(b, s, d) @ wo
+    x = x + o
+    h = _layer_norm(x, ln2)
+    x = x + jax.nn.gelu(h @ w1) @ w2
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("n_heads",))
+def encode(
+    params: dict, ids: jnp.ndarray, mask: jnp.ndarray, n_heads: int = 12
+) -> jnp.ndarray:
+    """ids, mask: [B, S] -> [B, 384] unit embeddings (mean-pool, §5.5)."""
+    s = ids.shape[1]
+    x = jnp.take(params["tok_emb"], ids, axis=0) + params["pos_emb"][:s][None]
+
+    def body(x, layer):
+        wqkv, wo, w1, w2, ln1, ln2 = layer
+        return _block(x, mask, wqkv, wo, w1, w2, ln1, ln2, n_heads), None
+
+    x, _ = jax.lax.scan(
+        body,
+        x,
+        (
+            params["wqkv"],
+            params["wo"],
+            params["w1"],
+            params["w2"],
+            params["ln1"],
+            params["ln2"],
+        ),
+    )
+    x = _layer_norm(x, params["ln_f"])
+    m = mask[..., None].astype(x.dtype)
+    pooled = (x * m).sum(1) / jnp.maximum(m.sum(1), 1.0)
+    return pooled / jnp.maximum(jnp.linalg.norm(pooled, axis=-1, keepdims=True), 1e-9)

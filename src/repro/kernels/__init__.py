@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU):
+
+  topk_sim        — the paper's serving hot spot: fused similarity + top-K
+  flash_attention — backend prefill attention (causal + sliding window)
+  ssd_scan        — Mamba-2 chunked state-space scan
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with TPU/CPU dispatch), ref.py (pure-jnp oracle).
+"""

@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: flash attention (online softmax), causal + window.
+
+Backend-pool prefill hot spot. TPU-native tiling (DESIGN.md §4): q blocks of
+[BLOCK_Q, hd] stay resident in VMEM while k/v stream through in [BLOCK_KV,
+hd] tiles; the online-softmax running max/denominator/accumulator live in
+VMEM scratch (HBM->VMEM once per tile — no [Sq, Skv] score matrix in HBM).
+Both matmuls hit the MXU with 128-aligned contraction dims. Fully-masked
+tiles (future tiles under causality, expired tiles under a sliding window)
+are skipped via `pl.when`, which is what makes the windowed variant
+sub-quadratic in wall-clock, not just in mask shape.
+
+Grid: (batch*heads, q_blocks, kv_blocks), kv innermost (sequential carry).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas", "BLOCK_Q", "BLOCK_KV"]
+
+BLOCK_Q = 128
+BLOCK_KV = 128
+NEG = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s,
+    *, sm_scale: float, causal: bool, window: int, q_offset: int, skv: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_s[...] = jnp.full_like(m_s, NEG)
+        l_s[...] = jnp.zeros_like(l_s)
+        acc_s[...] = jnp.zeros_like(acc_s)
+
+    q_lo = q_offset + qi * BLOCK_Q  # absolute position of the q tile start
+    k_lo = ki * BLOCK_KV
+    # tile-level skip: entirely in the future (causal) or expired (window)
+    live = True
+    if causal:
+        live = k_lo <= q_lo + BLOCK_Q - 1
+    if window:
+        live = jnp.logical_and(live, k_lo + BLOCK_KV - 1 > q_lo - window)
+
+    @pl.when(live)
+    def _body():
+        q = q_ref[0]  # [BQ, hd]
+        k = k_ref[0]  # [BK, hd]
+        v = v_ref[0]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # [BQ, BK]
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < skv  # kv padding
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_s[...]  # [BQ, 1]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)  # [BQ, BK]
+        alpha = jnp.exp(m_prev - m_new)  # [BQ, 1]
+        l_s[...] = l_s[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_s[...] = acc_s[...] * alpha + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_s[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        o_ref[0] = (acc_s[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "q_offset", "interpret")
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,  # [BH, Sq, hd]
+    k: jnp.ndarray,  # [BH, Skv, hd]
+    v: jnp.ndarray,  # [BH, Skv, hd]
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    sm_scale = 1.0 / np.sqrt(hd)
+    qp = (-sq) % BLOCK_Q
+    kp = (-skv) % BLOCK_KV
+    dp = (-hd) % 128
+    if qp or dp:
+        q = jnp.pad(q, ((0, 0), (0, qp), (0, dp)))
+    if kp or dp:
+        k = jnp.pad(k, ((0, 0), (0, kp), (0, dp)))
+        v = jnp.pad(v, ((0, 0), (0, kp), (0, dp)))
+    sqq, skk, hdd = sq + qp, skv + kp, hd + dp
+
+    grid = (bh, sqq // BLOCK_Q, skk // BLOCK_KV)
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, sm_scale=sm_scale, causal=causal, window=window,
+            q_offset=q_offset, skv=skv,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, BLOCK_Q, hdd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, BLOCK_KV, hdd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, BLOCK_KV, hdd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK_Q, hdd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sqq, hdd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, 1), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, hdd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq, :hd]

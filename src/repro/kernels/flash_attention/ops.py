@@ -1,0 +1,30 @@
+"""Jit'd public wrapper for flash attention (Pallas on TPU, jnp elsewhere)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention"]
+
+
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            interpret=interpret,
+        )
+    return attention_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: causal (optionally sliding-window) attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [BH, Sq, hd]
+    k: jnp.ndarray,  # [BH, Skv, hd]
+    v: jnp.ndarray,  # [BH, Skv, hd]
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    hd = q.shape[-1]
+    logits = jnp.einsum("bqd,bkd->bqk", q, k).astype(jnp.float32) / np.sqrt(hd)
+    qpos = q_offset + jnp.arange(q.shape[1])[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones_like(logits, dtype=bool)
+    if causal:
+        mask &= (kpos <= qpos)[None]
+    if window:
+        mask &= (kpos > qpos - window)[None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bqk,bkd->bqd", probs, v)

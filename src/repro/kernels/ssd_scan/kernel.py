@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: Mamba-2 SSD chunk scan (arXiv:2405.21060, §6).
+
+TPU-native adaptation (DESIGN.md §4): one (batch x head) pair per grid row,
+chunks sequential so the carried state [P, N] lives in VMEM scratch across
+the chunk axis. Per tile, all four contractions (C B^T scores, diag-block
+output, state readout, chunk-state update) are [chunk x N/P] matmuls that
+land on the MXU — chunk=256, P=64, N=128 are all lane/sublane aligned. The
+decay matrices are built in-register from a cumulative-sum iota; nothing
+quadratic in S ever touches HBM.
+
+Grid: (B*H, n_chunks). The inter-chunk recurrence — a sequential
+multiply-accumulate in the original — becomes the scratch carry.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_scan_pallas"]
+
+
+def _kernel(x_ref, dt_ref, alog_ref, b_ref, c_ref, y_ref, st_out, state_s, *, nc: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_s[...] = jnp.zeros_like(state_s)
+
+    x = x_ref[0].astype(jnp.float32)  # [L, P]
+    dt = dt_ref[0].astype(jnp.float32)  # [L, 1]
+    a = -jnp.exp(alog_ref[0, 0].astype(jnp.float32))  # scalar
+    b = b_ref[0].astype(jnp.float32)  # [L, N]
+    c = c_ref[0].astype(jnp.float32)  # [L, N]
+
+    xd = x * dt  # discretized input [L, P]
+    adt = a * dt  # [L, 1] log-decays
+    a_cum = jnp.cumsum(adt, axis=0)  # [L, 1]
+
+    li = a_cum  # [L, 1]
+    lj = a_cum.T  # [1, L]
+    l_size = x.shape[0]
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (l_size, l_size), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (l_size, l_size), 1)
+    )
+    l_mat = jnp.where(causal, jnp.exp(jnp.minimum(li - lj, 0.0)), 0.0)  # [L, L]
+
+    scores = jax.lax.dot_general(
+        c, b, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [L, L]
+    y = jax.lax.dot(scores * l_mat, xd, preferred_element_type=jnp.float32)
+
+    # carried-state readout: y += (C * exp(a_cum)) @ state^T  ([L,N]@[N,P])
+    state = state_s[...]  # [P, N]
+    y = y + jax.lax.dot_general(
+        c * jnp.exp(a_cum), state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    # chunk-state update: state' = state * exp(sum adt) + (xd^T @ (B * seg))
+    seg = jnp.exp(a_cum[-1:] - a_cum)  # [L, 1]
+    contrib = jax.lax.dot_general(
+        xd, b * seg, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [P, N]
+    state_s[...] = state * jnp.exp(a_cum[-1, 0]) + contrib
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        st_out[0] = state_s[...].astype(st_out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(
+    x: jnp.ndarray,  # [B, S, H, P]
+    dt: jnp.ndarray,  # [B, S, H]
+    a_log: jnp.ndarray,  # [H]
+    b_mat: jnp.ndarray,  # [B, S, G, N]
+    c_mat: jnp.ndarray,  # [B, S, G, N]
+    chunk: int,
+    interpret: bool = False,
+):
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    assert s % chunk == 0
+    nc = s // chunk
+    rep = h // g
+
+    # lay out as (B*H, S, ...) rows; broadcast groups over heads
+    xq = x.transpose(0, 2, 1, 3).reshape(bsz * h, s, p)
+    dtq = dt.transpose(0, 2, 1).reshape(bsz * h, s, 1)
+    bq = jnp.repeat(b_mat.transpose(0, 2, 1, 3), rep, axis=1).reshape(bsz * h, s, n)
+    cq = jnp.repeat(c_mat.transpose(0, 2, 1, 3), rep, axis=1).reshape(bsz * h, s, n)
+    alogq = jnp.tile(a_log, bsz).reshape(bsz * h, 1)
+
+    grid = (bsz * h, nc)
+    y, st = pl.pallas_call(
+        functools.partial(_kernel, nc=nc),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda r, ci: (r, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda r, ci: (r, ci, 0)),
+            pl.BlockSpec((1, 1), lambda r, ci: (r, 0)),
+            pl.BlockSpec((1, chunk, n), lambda r, ci: (r, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda r, ci: (r, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda r, ci: (r, ci, 0)),
+            pl.BlockSpec((1, p, n), lambda r, ci: (r, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz * h, s, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xq, dtq, alogq, bq, cq)
+    y = y.reshape(bsz, h, s, p).transpose(0, 2, 1, 3)
+    st = st.reshape(bsz, h, p, n)
+    return y, st

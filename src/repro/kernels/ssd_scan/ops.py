@@ -1,0 +1,27 @@
+"""Jit'd public wrapper for the SSD chunk scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+__all__ = ["ssd_scan"]
+
+
+def ssd_scan(
+    x: jnp.ndarray,
+    dt: jnp.ndarray,
+    a_log: jnp.ndarray,
+    b_mat: jnp.ndarray,
+    c_mat: jnp.ndarray,
+    chunk: int,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas:
+        return ssd_scan_pallas(x, dt, a_log, b_mat, c_mat, chunk, interpret=interpret)
+    return ssd_scan_ref(x, dt, a_log, b_mat, c_mat, chunk)

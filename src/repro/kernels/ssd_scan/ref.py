@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: the chunked state-space
+duality algorithm from repro.models.ssm (single source of truth)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+__all__ = ["ssd_scan_ref"]
+
+
+def ssd_scan_ref(
+    x: jnp.ndarray,  # [B, S, H, P]
+    dt: jnp.ndarray,  # [B, S, H]
+    a_log: jnp.ndarray,  # [H]
+    b_mat: jnp.ndarray,  # [B, S, G, N]
+    c_mat: jnp.ndarray,  # [B, S, G, N]
+    chunk: int,
+):
+    return ssd_chunked(x, dt, a_log, b_mat, c_mat, chunk)

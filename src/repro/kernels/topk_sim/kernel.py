@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: fused tool-similarity + running top-K.
+
+The paper's serving hot spot (embed -> dot-products -> top-K, §4.1) for
+routers co-located with TPU pods. TPU-native design (DESIGN.md §4):
+
+  * the tool table streams HBM->VMEM in [BLOCK_T, D] tiles; D is padded to a
+    lane multiple (384 -> 512) so the q @ tile^T contraction runs on the MXU;
+  * a running top-K (scores + indices) lives in VMEM scratch across the tool
+    grid axis — one pass over the table, no global [Q, T] score matrix is
+    ever materialized (the jnp reference writes Q*T floats to HBM; at
+    T=100k tools that is the difference between streaming and spilling);
+  * the merge is a single descending sort over [K + BLOCK_T] candidates per
+    query row (K <= 64 << BLOCK_T, so sort cost is dominated by the tile).
+
+Grid: (q_blocks, t_blocks), t innermost so the scratch carry is sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["topk_sim_pallas", "BLOCK_Q", "BLOCK_T"]
+
+BLOCK_Q = 128
+BLOCK_T = 512
+NEG = -1e30
+
+
+def _kernel(q_ref, t_ref, vals_out, idx_out, vals_s, idx_s, *, k: int, n_tools: int):
+    ti = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(ti == 0)
+    def _init():
+        vals_s[...] = jnp.full_like(vals_s, NEG)
+        idx_s[...] = jnp.zeros_like(idx_s)
+
+    q = q_ref[...]  # [BQ, D]
+    t = t_ref[...]  # [BT, D]
+    scores = jax.lax.dot_general(
+        q, t, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [BQ, BT]
+    base = ti * BLOCK_T
+    col = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) + base
+    # mask padding rows of the table (T padded up to a BLOCK_T multiple)
+    scores = jnp.where(col < n_tools, scores, NEG)
+
+    cand_v = jnp.concatenate([vals_s[...], scores], axis=1)  # [BQ, K+BT]
+    cand_i = jnp.concatenate([idx_s[...], col], axis=1)
+    order = jnp.argsort(-cand_v, axis=1)[:, :k]
+    vals_s[...] = jnp.take_along_axis(cand_v, order, axis=1)
+    idx_s[...] = jnp.take_along_axis(cand_i, order, axis=1)
+
+    @pl.when(ti == nt - 1)
+    def _emit():
+        vals_out[...] = vals_s[...]
+        idx_out[...] = idx_s[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_sim_pallas(
+    queries: jnp.ndarray,  # [Q, D]
+    table: jnp.ndarray,  # [T, D]
+    k: int,
+    interpret: bool = False,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    q, d = queries.shape
+    t = table.shape[0]
+    # pad every axis to hardware-aligned multiples
+    qp = (-q) % BLOCK_Q
+    tp = (-t) % BLOCK_T
+    dp = (-d) % 128
+    if qp or dp:
+        queries = jnp.pad(queries, ((0, qp), (0, dp)))
+    if tp or dp:
+        table = jnp.pad(table, ((0, tp), (0, dp)))
+    qq, tt, dd = q + qp, t + tp, d + dp
+
+    grid = (qq // BLOCK_Q, tt // BLOCK_T)
+    vals, idx = pl.pallas_call(
+        functools.partial(_kernel, k=k, n_tools=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_Q, dd), lambda qi, ti: (qi, 0)),
+            pl.BlockSpec((BLOCK_T, dd), lambda qi, ti: (ti, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_Q, k), lambda qi, ti: (qi, 0)),
+            pl.BlockSpec((BLOCK_Q, k), lambda qi, ti: (qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qq, k), jnp.float32),
+            jax.ShapeDtypeStruct((qq, k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((BLOCK_Q, k), jnp.float32),
+            pltpu.VMEM((BLOCK_Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, table)
+    return vals[:q], idx[:q]

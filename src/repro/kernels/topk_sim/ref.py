@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the fused similarity + top-K kernel (Eq. 2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["topk_sim_ref"]
+
+
+def topk_sim_ref(
+    queries: jnp.ndarray,  # [Q, D] unit rows
+    table: jnp.ndarray,  # [T, D] unit rows
+    k: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (scores [Q, k], indices [Q, k]) by descending similarity."""
+    sims = queries @ table.T
+    return jax.lax.top_k(sims, k)

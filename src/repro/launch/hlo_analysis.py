@@ -1,0 +1,122 @@
+"""Post-SPMD HLO analysis: collective-bytes extraction + roofline terms.
+
+`cost_analysis()` gives per-device FLOPs and HBM bytes but says nothing about
+collectives, so we parse the partitioned HLO (`compiled.as_text()`) and sum
+the buffer sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op (DESIGN.md §7).
+
+Conventions (documented in EXPERIMENTS.md §Roofline):
+  * HLO shapes after SPMD partitioning are per-device; all numbers here are
+    per-device per step.
+  * wire-cost weights approximate ring algorithms: all-reduce 2x its buffer,
+    gather/scatter/permute/all-to-all 1x.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+__all__ = ["CollectiveStats", "parse_collectives", "roofline_terms", "HW"]
+
+# TPU v5e hardware constants (per chip)
+HW = {
+    "peak_flops": 197e12,  # bf16 FLOP/s
+    "hbm_bw": 819e9,  # B/s
+    "ici_bw": 50e9,  # B/s per link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+# wire multiplier (ring algorithm approximation)
+_WIRE_WEIGHT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}() /+\-*#_]*?\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_type: Dict[str, int]
+    count_by_type: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_type.values())
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(_WIRE_WEIGHT[k] * v for k, v in self.bytes_by_type.items())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    bytes_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    count_by: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_text, op = m.group(1), m.group(2)
+        if "-done(" in line:  # async pair: count the start only
+            continue
+        b = _shape_bytes(shape_text)
+        bytes_by[op] += b
+        count_by[op] += 1
+    return CollectiveStats(bytes_by_type=bytes_by, count_by_type=count_by)
+
+
+def roofline_terms(
+    flops_per_device: float,
+    hbm_bytes_per_device: float,
+    collective_wire_bytes: float,
+    n_links: int = 4,  # v5e: 4 ICI links per chip (2D torus)
+) -> Dict[str, float]:
+    """Three roofline terms in seconds (per device, per step)."""
+    compute_s = flops_per_device / HW["peak_flops"]
+    memory_s = hbm_bytes_per_device / HW["hbm_bw"]
+    collective_s = collective_wire_bytes / (HW["ici_bw"] * n_links)
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+    }

@@ -1,0 +1,101 @@
+"""Input ShapeDtypeStructs for every (architecture x input shape) program.
+
+The assigned input shapes (see DESIGN.md):
+    train_4k      seq=4,096    global_batch=256   -> train_step
+    prefill_32k   seq=32,768   global_batch=32    -> prefill
+    decode_32k    seq=32,768   global_batch=128   -> decode_step
+    long_500k     seq=524,288  global_batch=1     -> decode_step (sub-quadratic)
+
+Everything here is ShapeDtypeStruct — no allocation ever happens; dry-run
+lowering reads these directly. Shardings resolve through the same logical
+rules as the model itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import named_sharding
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+
+__all__ = ["SHAPES", "ShapeCase", "input_specs", "program_for", "variant_for_shape"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeCase] = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+# Full-attention architectures run long_500k as an explicit sliding-window
+# VARIANT (DESIGN.md §5); SSM/hybrid run it natively.
+LONG_CONTEXT_WINDOW = 8192
+
+
+def variant_for_shape(cfg: ModelConfig, shape: ShapeCase) -> ModelConfig:
+    """Apply the long-context sliding-window variant where required."""
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return dataclasses.replace(
+            cfg, name=cfg.name + "+swa", sliding_window=LONG_CONTEXT_WINDOW
+        )
+    return cfg
+
+
+def _struct(mesh, shape: Tuple[int, ...], axes, dtype) -> jax.ShapeDtypeStruct:
+    sharding = named_sharding(mesh, axes, shape) if mesh is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeCase, mesh=None
+) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for the given program kind."""
+    b, s = shape.global_batch, shape.seq_len
+    act_dtype = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.n_codebooks:
+            tokens = _struct(mesh, (b, s, cfg.n_codebooks), ("batch", None, None), jnp.int32)
+        else:
+            tokens = _struct(mesh, (b, s), ("batch", None), jnp.int32)
+        batch = {"tokens": tokens}
+        if cfg.cross_attn_every:
+            batch["image_embeds"] = _struct(
+                mesh, (b, cfg.n_image_tokens, cfg.d_model), ("batch", None, None), act_dtype
+            )
+        return batch
+    # decode: one new token against a seq_len cache
+    if cfg.n_codebooks:
+        token = _struct(mesh, (b, 1, cfg.n_codebooks), ("batch", None, None), jnp.int32)
+    else:
+        token = _struct(mesh, (b, 1), ("batch", None), jnp.int32)
+    return {"token": token, "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def cache_structs(cfg: ModelConfig, shape: ShapeCase, mesh=None) -> Dict[str, Any]:
+    spec = M.cache_spec(cfg, shape.global_batch, shape.seq_len)
+    dtype = jnp.dtype(cfg.dtype)
+
+    def leaf(ps: ParamSpec):
+        sharding = named_sharding(mesh, ps.axes, ps.shape) if mesh is not None else None
+        return jax.ShapeDtypeStruct(ps.shape, dtype, sharding=sharding)
+
+    return jax.tree.map(leaf, spec, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def program_for(kind: str):
+    """Map a shape kind to the (cfg, params, ...) program it lowers."""
+    return {"train": "train_step", "prefill": "prefill", "decode": "decode_step"}[kind]

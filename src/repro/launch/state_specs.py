@@ -1,0 +1,62 @@
+"""Optimizer-state ShapeDtypeStructs (with shardings) for dry-run lowering.
+
+Optimizer state mirrors parameter sharding: Adam's mu/nu inherit the param's
+logical axes; Adafactor's factored vr/vc drop the reduced dimension's axis.
+Built straight from the ParamSpec tree, so the dry-run never allocates.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.sharding import named_sharding
+from repro.models.params import ParamSpec
+from repro.optim.adafactor import AdafactorState, _should_factor
+from repro.optim.adamw import AdamState
+from repro.optim.sgd import SgdState
+
+__all__ = ["opt_state_structs"]
+
+
+def _leaf_struct(mesh, shape, axes, dtype):
+    sharding = named_sharding(mesh, axes, shape) if mesh is not None else None
+    return jax.ShapeDtypeStruct(tuple(shape), dtype, sharding=sharding)
+
+
+def _mirror(specs, mesh, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda s: _leaf_struct(mesh, s.shape, s.axes, dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _scalar(dtype=jnp.int32):
+    return jax.ShapeDtypeStruct((), dtype)
+
+
+def opt_state_structs(optimizer_name: str, specs, mesh) -> Any:
+    if optimizer_name == "adamw":
+        return AdamState(
+            step=_scalar(), mu=_mirror(specs, mesh), nu=_mirror(specs, mesh)
+        )
+    if optimizer_name == "sgd":
+        return SgdState(step=_scalar(), momentum=_mirror(specs, mesh))
+    if optimizer_name == "adafactor":
+
+        def leaf(s: ParamSpec):
+            if _should_factor(s.shape):
+                return {
+                    "vr": _leaf_struct(mesh, s.shape[:-1], s.axes[:-1], jnp.float32),
+                    "vc": _leaf_struct(
+                        mesh, s.shape[:-2] + s.shape[-1:], s.axes[:-2] + s.axes[-1:],
+                        jnp.float32,
+                    ),
+                }
+            return {"v": _leaf_struct(mesh, s.shape, s.axes, jnp.float32)}
+
+        stats = jax.tree.map(leaf, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        return AdafactorState(step=_scalar(), stats=stats)
+    raise ValueError(f"unknown optimizer {optimizer_name!r}")

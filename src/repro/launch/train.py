@@ -1,0 +1,58 @@
+"""Training launcher: --arch <id> [--smoke] [key=value overrides].
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b --smoke \
+      --steps 50 --batch-size 4 --seq-len 128
+
+On real hardware the same entry point runs the production mesh; on this CPU
+container `--smoke` selects the reduced config (2 layers, d_model<=256).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import get_config
+from repro.data.lm_data import LMDataConfig, synthetic_lm_batches
+from repro.models.config import reduced
+from repro.training.train_step import TrainConfig
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced config for CPU")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default="auto")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = reduced(cfg)
+    tcfg = TrainerConfig(
+        steps=args.steps,
+        ckpt_every=args.ckpt_every,
+        ckpt_dir=args.ckpt_dir,
+        seed=args.seed,
+        train=TrainConfig(
+            learning_rate=args.lr, optimizer=args.optimizer, total_steps=args.steps
+        ),
+    )
+    trainer = Trainer(cfg, tcfg)
+    data = synthetic_lm_batches(
+        cfg, LMDataConfig(batch_size=args.batch_size, seq_len=args.seq_len, seed=args.seed)
+    )
+    history = trainer.fit(data)
+    first, last = history[0]["loss"], history[-1]["loss"]
+    print(f"loss {first:.4f} -> {last:.4f} ({100 * (first - last) / first:.1f}% drop)")
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Retrieval metrics: Recall@K, Precision@K, NDCG@K, MRR (paper §5.2).
+
+All functions operate on a ranked list of tool indices and a set of relevant
+tool indices, and are pure numpy (they run in the offline evaluation loop, not
+in the serving path). Batched jnp variants are provided for use inside jitted
+training/validation code (the Stage-1 validation gate, Stage-3 early stopping).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "recall_at_k",
+    "precision_at_k",
+    "ndcg_at_k",
+    "mrr",
+    "evaluate_ranking",
+    "batched_recall_at_k",
+    "batched_ndcg_at_k",
+]
+
+
+def recall_at_k(ranked: Sequence[int], relevant: Iterable[int], k: int) -> float:
+    rel = set(relevant)
+    if not rel:
+        return 0.0
+    hits = sum(1 for t in list(ranked)[:k] if t in rel)
+    return hits / len(rel)
+
+
+def precision_at_k(ranked: Sequence[int], relevant: Iterable[int], k: int) -> float:
+    if k <= 0:
+        return 0.0
+    rel = set(relevant)
+    hits = sum(1 for t in list(ranked)[:k] if t in rel)
+    return hits / k
+
+
+def ndcg_at_k(ranked: Sequence[int], relevant: Iterable[int], k: int) -> float:
+    """Binary-gain NDCG@K."""
+    rel = set(relevant)
+    if not rel:
+        return 0.0
+    dcg = 0.0
+    for pos, t in enumerate(list(ranked)[:k]):
+        if t in rel:
+            dcg += 1.0 / np.log2(pos + 2.0)
+    ideal_hits = min(len(rel), k)
+    idcg = sum(1.0 / np.log2(pos + 2.0) for pos in range(ideal_hits))
+    return dcg / idcg
+
+
+def mrr(ranked: Sequence[int], relevant: Iterable[int]) -> float:
+    rel = set(relevant)
+    for pos, t in enumerate(ranked):
+        if t in rel:
+            return 1.0 / (pos + 1.0)
+    return 0.0
+
+
+def evaluate_ranking(
+    ranked: Sequence[int], relevant: Iterable[int], ks: Sequence[int] = (1, 3, 5)
+) -> dict:
+    """All paper metrics for one query."""
+    out = {}
+    for k in ks:
+        out[f"recall@{k}"] = recall_at_k(ranked, relevant, k)
+        out[f"precision@{k}"] = precision_at_k(ranked, relevant, k)
+        out[f"ndcg@{k}"] = ndcg_at_k(ranked, relevant, k)
+    out["mrr"] = mrr(ranked, relevant)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Batched jnp variants (used inside jit: validation gate / early stopping).
+# Relevance is a dense [n_queries, n_tools] 0/1 matrix; rankings are
+# [n_queries, k] index matrices. Queries with no relevant tools contribute 0
+# and are excluded from the mean via the `valid` mask.
+# --------------------------------------------------------------------------
+
+
+def _gains(rankings: jnp.ndarray, relevance: jnp.ndarray) -> jnp.ndarray:
+    # rankings: [Q, k] int32; relevance: [Q, T] {0,1} -> [Q, k] gains
+    return jnp.take_along_axis(relevance, rankings, axis=1)
+
+
+def batched_recall_at_k(rankings: jnp.ndarray, relevance: jnp.ndarray) -> jnp.ndarray:
+    """Mean Recall@k over queries that have >=1 relevant tool.
+
+    rankings: [Q, k] indices into the tool axis. relevance: [Q, T] binary.
+    """
+    gains = _gains(rankings, relevance)
+    n_rel = relevance.sum(axis=1)
+    valid = n_rel > 0
+    rec = jnp.where(valid, gains.sum(axis=1) / jnp.maximum(n_rel, 1), 0.0)
+    return rec.sum() / jnp.maximum(valid.sum(), 1)
+
+
+def batched_ndcg_at_k(rankings: jnp.ndarray, relevance: jnp.ndarray) -> jnp.ndarray:
+    """Mean binary-gain NDCG@k, k = rankings.shape[1]."""
+    k = rankings.shape[1]
+    gains = _gains(rankings, relevance)  # [Q, k]
+    discounts = 1.0 / jnp.log2(jnp.arange(k, dtype=jnp.float32) + 2.0)  # [k]
+    dcg = (gains * discounts).sum(axis=1)
+    n_rel = relevance.sum(axis=1)
+    ideal_hits = jnp.minimum(n_rel, k)  # [Q]
+    # idcg = sum of first ideal_hits discounts
+    cum = jnp.cumsum(discounts)
+    idcg = jnp.where(
+        ideal_hits > 0, cum[jnp.maximum(ideal_hits.astype(jnp.int32) - 1, 0)], 1.0
+    )
+    valid = n_rel > 0
+    ndcg = jnp.where(valid, dcg / idcg, 0.0)
+    return ndcg.sum() / jnp.maximum(valid.sum(), 1)

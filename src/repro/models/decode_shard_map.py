@@ -1,0 +1,109 @@
+"""Seq-sharded decode attention via shard_map (flash-decoding combine).
+
+For architectures whose kv_heads don't divide the "model" axis (musicgen 24,
+command-r/arctic/granite/dbrx/llama-vision 8, qwen 2, hymba 5), the baseline
+replicates the decode KV cache across all 16 model shards — e.g. musicgen
+decode_32k carries 77 GB/device of replicated cache (memory term 95 ms).
+
+Here the cache's SEQUENCE dim is sharded over "model" (policy `tp_kvs`), and
+one-token attention runs as flash-decoding: each shard computes a partial
+(max, sum-exp, weighted-V) over its cache slice; the combine is a pmax + two
+tiny psums of [B, H, hd]-sized partials. Cache write lands only on the owner
+shard of the current ring slot. HBM per device drops ~16x; the added wire is
+O(B*H*hd) per layer — microscopic next to the cache it replaces.
+
+The naive alternative (a GSPMD sharding constraint on the cache) measurably
+backfires: the partitioner all-gathers the full cache per step (measured
+296 ms collective on musicgen decode_32k). Pinning the dataflow with
+shard_map is the point of this module.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = ["attn_decode_seq_sharded"]
+
+NEG = -2.0**30
+
+
+def _batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def attn_decode_seq_sharded(
+    cfg: ModelConfig,
+    q: jnp.ndarray,  # [B, 1, H, hd] (roped)
+    k: jnp.ndarray,  # [B, 1, Hkv, hd] (roped)
+    v: jnp.ndarray,  # [B, 1, Hkv, hd]
+    cache_k: jnp.ndarray,  # [B, W, Hkv, hd], seq dim sharded over "model"
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,  # scalar absolute position
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    mesh = jax.sharding.get_abstract_mesh()
+    w_global = cache_k.shape[1]
+    hd = q.shape[-1]
+    m = dict(zip(mesh.axis_names, mesh.axis_sizes)).get("model", 1)
+    baxes = _batch_axes(mesh)
+    bspec = baxes if baxes else None
+
+    def local(q_l, k_l, v_l, ck, cv, pos_s):
+        # ck/cv: [B_l, W/m, Hkv, hd] local slice; q_l: [B_l, 1, H, hd]
+        w_local = ck.shape[1]
+        shard = jax.lax.axis_index("model")
+        slot_g = pos_s % w_global if cfg.sliding_window else pos_s
+        owner = slot_g // w_local
+        slot_l = slot_g % w_local
+        upd_k = jax.lax.dynamic_update_slice_in_dim(ck, k_l, slot_l, axis=1)
+        upd_v = jax.lax.dynamic_update_slice_in_dim(cv, v_l, slot_l, axis=1)
+        is_owner = shard == owner
+        ck = jnp.where(is_owner, upd_k, ck)
+        cv = jnp.where(is_owner, upd_v, cv)
+
+        # validity in GLOBAL coordinates
+        kidx = shard * w_local + jnp.arange(w_local)
+        if cfg.sliding_window:
+            limit = jnp.minimum(pos_s, w_global - 1)
+        else:
+            limit = pos_s
+        valid = kidx <= limit  # [W/m]
+
+        b, _, h, _ = q_l.shape
+        hkv = ck.shape[2]
+        g = h // hkv
+        qg = q_l.reshape(b, hkv, g, hd)
+        logits = jnp.einsum("bkgd,btkd->bkgt", qg, ck).astype(jnp.float32) / np.sqrt(hd)
+        logits = jnp.where(valid[None, None, None, :], logits, NEG)
+        # flash-decoding combine across seq shards
+        lmax = logits.max(axis=-1, keepdims=True)  # [B,Hkv,g,1]
+        gmax = jax.lax.pmax(lmax, "model")
+        p = jnp.exp(logits - gmax)
+        den = jax.lax.psum(p.sum(axis=-1, keepdims=True), "model")
+        num = jnp.einsum("bkgt,btkd->bkgd", p.astype(cv.dtype), cv)
+        num = jax.lax.psum(num, "model")
+        out = (num / jnp.maximum(den, 1e-30).astype(num.dtype)).reshape(b, 1, h, hd)
+        return out, ck, cv
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(bspec, None, None, None),  # q (replicated over model)
+            P(bspec, None, None, None),  # k
+            P(bspec, None, None, None),  # v
+            P(bspec, "model", None, None),  # cache_k: seq-sharded
+            P(bspec, "model", None, None),  # cache_v
+            P(),  # pos
+        ),
+        out_specs=(
+            P(bspec, None, None, None),
+            P(bspec, "model", None, None),
+            P(bspec, "model", None, None),
+        ),
+    )(q, k, v, cache_k, cache_v, jnp.asarray(pos).reshape(()))

@@ -1,0 +1,283 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (full causal /
+sliding window / decode), SwiGLU MLP, capacity-based MoE, gated cross-attn.
+
+All functions are pure; parameters arrive as sub-dicts created from the spec
+trees in `repro.models.model`. Activation sharding uses logical constraints
+(`repro.common.sharding`) so the same code lowers on 1 CPU device and on the
+(pod, data, model) production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.sharding import logical_constraint as shard
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "rms_norm",
+    "rope",
+    "gqa_attention",
+    "attn_block",
+    "attn_decode",
+    "swiglu",
+    "moe_block",
+    "cross_attn_block",
+]
+
+NEG_INF = -2.0**30
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [B, S, H, hd]; positions: [B, S] absolute."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def gqa_attention(
+    q: jnp.ndarray,  # [B, S, H, hd]
+    k: jnp.ndarray,  # [B, T, Hkv, hd]
+    v: jnp.ndarray,  # [B, T, Hkv, hd]
+    mask: jnp.ndarray,  # [B or 1, S, T] boolean (True = attend)
+    repeat_kv: bool = False,
+) -> jnp.ndarray:
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    if repeat_kv and g > 1:
+        # §Perf: materialize KV per q-head so the score/pv einsums carry a
+        # single head dim that shards (possibly unevenly) over "model" —
+        # avoids full attention replication when hkv doesn't divide the axis
+        k = shard(jnp.repeat(k, g, axis=2), "batch", None, "heads", None)
+        v = shard(jnp.repeat(v, g, axis=2), "batch", None, "heads", None)
+        logits = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32) / np.sqrt(hd)
+        logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhst,bthd->bshd", probs, v)
+    qg = q.reshape(b, s, hkv, g, hd)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32) / np.sqrt(hd)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _causal_mask(s: int, t: int, q_offset, window: int) -> jnp.ndarray:
+    """[1, S, T] causal (+optional window) mask; q position i = q_offset + i."""
+    qpos = q_offset + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m = m & (kpos > qpos - window)
+    return m[None]
+
+
+def _qkv(p: dict, x: jnp.ndarray, cfg: ModelConfig, positions: jnp.ndarray):
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])  # [B,S,H,hd]
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])  # [B,S,Hkv,hd]
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def attn_block(
+    p: dict,
+    x: jnp.ndarray,  # [B, S, D] (already normed)
+    cfg: ModelConfig,
+    positions: jnp.ndarray,  # [B, S]
+    return_cache: bool = False,
+    max_cache_len: int = 0,
+) -> jnp.ndarray | Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Full-sequence causal attention (train / prefill)."""
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    mask = _causal_mask(s, s, 0, cfg.sliding_window)
+    out = gqa_attention(q, k, v, mask, repeat_kv=cfg.repeat_kv)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    out = shard(out, "batch", "act_seq", None)
+    if not return_cache:
+        return out
+    # prefill: build the decode cache [B, W, Hkv, hd].
+    #  * sliding window: keep the last W entries, rolled so that entry for
+    #    absolute position p sits at ring slot p % W (decode convention);
+    #  * full attention: pad to `max_cache_len` slots (decode budget).
+    w = cfg.sliding_window
+    if w and w < s:
+        k, v = k[:, s - w :], v[:, s - w :]
+        if s % w:
+            k = jnp.roll(k, s % w, axis=1)
+            v = jnp.roll(v, s % w, axis=1)
+    elif max_cache_len and max_cache_len > k.shape[1]:
+        pad = max_cache_len - k.shape[1]
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, (k, v)
+
+
+def attn_decode(
+    p: dict,
+    x: jnp.ndarray,  # [B, 1, D] (already normed)
+    cfg: ModelConfig,
+    cache_k: jnp.ndarray,  # [B, W, Hkv, hd] ring buffer (keys stored roped)
+    cache_v: jnp.ndarray,
+    pos: jnp.ndarray,  # [] or [B] — absolute position of the new token
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against a (possibly ring-buffered) KV cache."""
+    b, _, d = x.shape
+    w = cache_k.shape[1]
+    positions = jnp.broadcast_to(jnp.asarray(pos).reshape(-1, 1), (b, 1))
+    q, k, v = _qkv(p, x, cfg, positions)
+    if cfg.decode_attn == "seq_shard":
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is not None and not mesh.empty and "model" in mesh.axis_names:
+            from repro.models.decode_shard_map import attn_decode_seq_sharded
+
+            out, cache_k, cache_v = attn_decode_seq_sharded(
+                cfg, q, k, v, cache_k, cache_v, pos
+            )
+            out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+            return shard(out, "batch", None, None), cache_k, cache_v
+    slot = jnp.asarray(pos).reshape(()) % w if cfg.sliding_window else jnp.asarray(pos).reshape(())
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    # validity: ring slots written so far; keys keep absolute-position RoPE
+    kidx = jnp.arange(w)
+    if cfg.sliding_window:
+        valid = kidx[None, :] <= jnp.minimum(jnp.asarray(pos).reshape(()), w - 1)
+    else:
+        valid = kidx[None, :] <= jnp.asarray(pos).reshape(())
+    mask = valid[:, None, :]  # [1, 1, W]
+    out = gqa_attention(q, cache_k, cache_v, mask, repeat_kv=cfg.repeat_kv)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return shard(out, "batch", None, None), cache_k, cache_v
+
+
+def swiglu(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"])) * jnp.einsum(
+        "bsd,df->bsf", x, p["w_up"]
+    )
+    h = shard(h, "batch", None, "ff")
+    return shard(jnp.einsum("bsf,fd->bsd", h, p["w_down"]), "batch", "act_seq", None)
+
+
+# --------------------------------------------------------------------------
+# Mixture of Experts: capacity-based scatter dispatch (DESIGN.md §6).
+# --------------------------------------------------------------------------
+
+
+def moe_block(
+    p: dict, x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k routed experts with capacity; returns (y, aux_loss).
+
+    Dispatch is a scatter into per-expert buffers [E, C, D] (sharded over the
+    "experts"->"model" axis), expert FFNs run as one batched einsum, and
+    tokens gather their k expert outputs back. GSPMD turns the
+    scatter/gather into all-to-all-style collectives across the model axis.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    t = b * s
+    cap = max(int(np.ceil(t * k / e * cfg.capacity_factor)), 1)
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)  # [T, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) assignment within its expert's buffer
+    flat_e = top_e.reshape(-1)  # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # [T*k, E]
+    pos = jnp.cumsum(onehot, axis=0) - onehot  # pre-count
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # [T*k]
+    keep = slot < cap
+    target = jnp.where(keep, flat_e * cap + slot, e * cap)  # overflow -> dropped row
+
+    data = jnp.repeat(xt, k, axis=0) * keep[:, None].astype(x.dtype)
+    buffers = jnp.zeros((e * cap + 1, d), x.dtype).at[target].add(data)
+    buf = buffers[: e * cap].reshape(e, cap, d)
+    buf = shard(buf, "experts", None, None)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", buf, p["w_up"]
+    )
+    h = shard(h, "experts", None, "ff")
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(e * cap, d)
+    out_buf = jnp.concatenate([out_buf, jnp.zeros((1, d), x.dtype)], axis=0)
+
+    gathered = out_buf[target]  # [T*k, D]
+    w = (top_w.reshape(-1) * keep).astype(x.dtype)
+    y = (gathered * w[:, None]).reshape(t, k, d).sum(axis=1).reshape(b, s, d)
+    y = shard(y, "batch", "act_seq", None)
+
+    # Switch-style load-balance loss + router z-loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[:, 0], e, dtype=jnp.float32), axis=0
+    )
+    frac_probs = jnp.mean(probs, axis=0)
+    lb = e * jnp.sum(frac_tokens * frac_probs) * cfg.load_balance_weight
+    z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * cfg.router_z_weight
+    return y, lb + z
+
+
+# --------------------------------------------------------------------------
+# Gated cross-attention (llama-3.2-vision style image layers).
+# --------------------------------------------------------------------------
+
+
+def cross_attn_block(
+    p: dict,
+    x: jnp.ndarray,  # [B, S, D] text stream
+    cfg: ModelConfig,
+    img_k: jnp.ndarray,  # [B, I, Hkv, hd] precomputed from patch embeddings
+    img_v: jnp.ndarray,
+) -> jnp.ndarray:
+    """x + tanh(g_a)*xattn + tanh(g_f)*ffn — the vision-conditioning layer."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    q = shard(q, "batch", None, "heads", None)
+    b, s = x.shape[:2]
+    mask = jnp.ones((1, s, img_k.shape[1]), dtype=bool)  # full cross attention
+    out = gqa_attention(q, img_k, img_v, mask)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    x = x + jnp.tanh(p["gate_attn"]) * out
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    x = x + jnp.tanh(p["gate_ffn"]) * swiglu(p["mlp"], h)
+    return x
+
+
+def cross_attn_kv(p: dict, img_embeds: jnp.ndarray, cfg: ModelConfig):
+    """Project (stubbed) vision-tower patch embeddings to K/V once."""
+    k = jnp.einsum("bid,dhk->bihk", img_embeds, p["wk"])
+    v = jnp.einsum("bid,dhk->bihk", img_embeds, p["wv"])
+    return shard(k, "batch", None, "kv_heads", None), shard(
+        v, "batch", None, "kv_heads", None
+    )

@@ -1,0 +1,449 @@
+"""Unified backend model: spec construction + train/prefill/decode programs.
+
+One module covers all six assigned families (dense / moe / ssm / hybrid /
+vlm / audio). Layers are scanned with stacked parameters so HLO size is O(1)
+in depth (a 100-layer VLM lowers as fast as a 2-layer smoke model) and remat
+policy attaches to the scan body.
+
+Program surface (what the launcher lowers):
+  train_step(params, opt_state, batch)        — in launch/train.py
+  forward / loss_fn(params, batch)            — here
+  prefill(params, batch) -> (logits, cache)   — here
+  decode_step(params, cache, batch)           — here
+Batch layouts are produced by `repro.launch.specs.input_specs`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.sharding import logical_constraint as shard
+from repro.models import layers as lyr
+from repro.models import ssm as ssm_lib
+from repro.models.moe_shard_map import moe_block_shard_map
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec as PS
+from repro.models.params import init_params
+
+__all__ = [
+    "make_specs",
+    "init",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "cache_spec",
+]
+
+
+# ============================================================ spec building
+def _attn_specs(cfg: ModelConfig, n: int, stack_axis: str = "layers") -> Dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {
+        "wq": PS((n, d, h, hd), (stack_axis, "embed", "heads", None)),
+        "wk": PS((n, d, hkv, hd), (stack_axis, "embed", "kv_heads", None)),
+        "wv": PS((n, d, hkv, hd), (stack_axis, "embed", "kv_heads", None)),
+        "wo": PS((n, h, hd, d), (stack_axis, "heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = PS((n, h, hd), (stack_axis, "heads", None), "zeros")
+        s["bk"] = PS((n, hkv, hd), (stack_axis, "kv_heads", None), "zeros")
+        s["bv"] = PS((n, hkv, hd), (stack_axis, "kv_heads", None), "zeros")
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig, n: int, ff: Optional[int] = None, stack_axis="layers"):
+    d = cfg.d_model
+    f = ff or cfg.d_ff
+    return {
+        "w_gate": PS((n, d, f), (stack_axis, "embed", "ff")),
+        "w_up": PS((n, d, f), (stack_axis, "embed", "ff")),
+        "w_down": PS((n, f, d), (stack_axis, "ff", "embed")),
+    }
+
+
+def _moe_specs(cfg: ModelConfig, n: int):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.expert_ff
+    return {
+        "router": PS((n, d, e), ("layers", "embed", None)),
+        "w_gate": PS((n, e, d, f), ("layers", "experts", "embed", "ff")),
+        "w_up": PS((n, e, d, f), ("layers", "experts", "embed", "ff")),
+        "w_down": PS((n, e, f, d), ("layers", "experts", "ff", "embed")),
+    }
+
+
+def _ssm_specs(cfg: ModelConfig, n: int):
+    d, di = cfg.d_model, cfg.d_inner
+    gn = cfg.ssm_n_groups * cfg.ssm_state
+    h = cfg.ssm_heads
+    dproj = 2 * di + 2 * gn + h
+    conv_c = di + 2 * gn
+    k = cfg.ssm_conv_width
+    return {
+        "in_proj": PS((n, d, dproj), ("layers", "embed", None)),
+        "conv_w": PS((n, k, conv_c), ("layers", None, None)),
+        "conv_b": PS((n, conv_c), ("layers", None), "zeros"),
+        "a_log": PS((n, h), ("layers", "ssm_heads"), "zeros"),
+        "d_skip": PS((n, h), ("layers", "ssm_heads"), "ones"),
+        "dt_bias": PS((n, h), ("layers", "ssm_heads"), "zeros"),
+        "norm": PS((n, di), ("layers", None), "ones"),
+        "out_proj": PS((n, di, d), ("layers", None, "embed")),
+    }
+
+
+def make_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, v = cfg.d_model, cfg.vocab_size
+    L = cfg.n_layers
+    n_cross = L // cfg.cross_attn_every if cfg.cross_attn_every else 0
+    n_self = L - n_cross
+    kb = cfg.n_codebooks or 1
+
+    specs: Dict[str, Any] = {
+        "embed": PS((kb * v, d), ("vocab", "embed"), "embed"),
+        "ln_f": PS((d,), (None,), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = PS((d, kb * v), ("embed", "vocab"))
+
+    layer: Dict[str, Any] = {"ln1": PS((n_self, d), ("layers", None), "ones")}
+    if cfg.arch_type == "ssm":
+        layer["ssm"] = _ssm_specs(cfg, n_self)
+    else:
+        layer["attn"] = _attn_specs(cfg, n_self)
+        layer["ln2"] = PS((n_self, d), ("layers", None), "ones")
+        if cfg.arch_type == "moe":
+            layer["moe"] = _moe_specs(cfg, n_self)
+            if cfg.dense_residual:
+                layer["mlp"] = _mlp_specs(cfg, n_self)
+        else:
+            layer["mlp"] = _mlp_specs(cfg, n_self)
+        if cfg.hybrid:
+            layer["ssm"] = _ssm_specs(cfg, n_self)
+    specs["layers"] = layer
+
+    if n_cross:
+        specs["cross"] = {
+            **_attn_specs(cfg, n_cross, "stack"),
+            "ln1": PS((n_cross, d), ("stack", None), "ones"),
+            "ln2": PS((n_cross, d), ("stack", None), "ones"),
+            "gate_attn": PS((n_cross,), ("stack",), "zeros"),
+            "gate_ffn": PS((n_cross,), ("stack",), "zeros"),
+            "mlp": _mlp_specs(cfg, n_cross, stack_axis="stack"),
+        }
+    return specs
+
+
+def init(cfg: ModelConfig, key: jax.Array) -> Dict[str, Any]:
+    return init_params(key, make_specs(cfg), dtype=jnp.dtype(cfg.dtype))
+
+
+# ============================================================== embedding
+def _embed_tokens(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    if cfg.n_codebooks:
+        # musicgen: sum the K codebook embeddings (tokens [B, S, K])
+        offsets = jnp.arange(cfg.n_codebooks, dtype=tokens.dtype) * cfg.vocab_size
+        x = jnp.take(params["embed"], tokens + offsets, axis=0).sum(axis=2)
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    return shard(x, "batch", "act_seq", None)
+
+
+def _logits(cfg: ModelConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    x = lyr.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    if cfg.n_codebooks:
+        b, s, _ = logits.shape
+        logits = logits.reshape(b, s, cfg.n_codebooks, cfg.vocab_size)
+    return logits
+
+
+# =============================================================== layer body
+def _self_layer(cfg: ModelConfig, lp, x, positions):
+    """One decoder layer (train/prefill, no cache). Returns (x, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = lyr.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.arch_type == "ssm":
+        return x + ssm_lib.ssm_block(lp["ssm"], h, cfg), aux
+    attn_out = lyr.attn_block(lp["attn"], h, cfg, positions)
+    if cfg.hybrid:
+        attn_out = 0.5 * (attn_out + ssm_lib.ssm_block(lp["ssm"], h, cfg))
+    x = x + attn_out
+    h = lyr.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.arch_type == "moe":
+        moe_fn = moe_block_shard_map if cfg.moe_impl == "shard_map" else lyr.moe_block
+        y, aux = moe_fn(lp["moe"], h, cfg)
+        if cfg.dense_residual:
+            y = y + lyr.swiglu(lp["mlp"], h)
+        x = x + y
+    else:
+        x = x + lyr.swiglu(lp["mlp"], h)
+    return x, aux
+
+
+def _scan_layers(cfg: ModelConfig, params, x, positions, img_kv=None):
+    """Scan the decoder stack; interleaves cross-attn groups for VLMs."""
+
+    def body(carry, lp):
+        y, aux = _self_layer(cfg, lp, carry, positions)
+        return y, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    un = cfg.scan_unroll
+    if not cfg.cross_attn_every:
+        n_self = cfg.n_layers
+        x, auxes = jax.lax.scan(body, x, params["layers"], unroll=n_self if un else 1)
+        return x, auxes.sum()
+
+    # VLM: groups of (cross_attn_every - 1) self layers + 1 cross layer
+    cae = cfg.cross_attn_every
+    n_cross = cfg.n_layers // cae
+    per = cae - 1
+    grouped = jax.tree.map(
+        lambda t: t.reshape((n_cross, per) + t.shape[1:]), params["layers"]
+    )
+    img_k, img_v = img_kv
+
+    def group_body(carry, inp):
+        gp, cp, gk, gv = inp
+        y, auxes = jax.lax.scan(body, carry, gp, unroll=per if un else 1)
+        y = lyr.cross_attn_block(cp, y, cfg, gk, gv)
+        return y, auxes.sum()
+
+    x, auxes = jax.lax.scan(
+        group_body, x, (grouped, params["cross"], img_k, img_v),
+        unroll=n_cross if un else 1,
+    )
+    return x, auxes.sum()
+
+
+def _cross_kv_all(cfg: ModelConfig, params, img_embeds):
+    """Project patch embeddings to per-cross-layer K/V: [G, B, I, Hkv, hd]."""
+    return jax.vmap(
+        lambda wk, wv: lyr.cross_attn_kv({"wk": wk, "wv": wv}, img_embeds, cfg)
+    )(params["cross"]["wk"], params["cross"]["wv"])
+
+
+# ================================================================= programs
+def forward(cfg: ModelConfig, params, batch) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Teacher-forced forward: logits [B,S,(K,)V], aux loss."""
+    x = _embed_tokens(cfg, params, batch)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    img_kv = None
+    if cfg.cross_attn_every:
+        img_kv = _cross_kv_all(cfg, params, batch["image_embeds"].astype(x.dtype))
+    x, aux = _scan_layers(cfg, params, x, positions, img_kv)
+    return _logits(cfg, params, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(cfg, params, batch)
+    targets = batch["tokens"][:, 1:]
+    logits = logits[:, :-1].astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    ce = nll.mean()
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+# ---------------------------------------------------------------- caching
+def cache_spec(cfg: ModelConfig, batch_size: int, seq_len: int) -> Dict[str, Any]:
+    """Shapes+logical axes of the decode cache for (batch, context length)."""
+    w = min(cfg.sliding_window, seq_len) if cfg.sliding_window else seq_len
+    n_cross = cfg.n_layers // cfg.cross_attn_every if cfg.cross_attn_every else 0
+    n_self = cfg.n_layers - n_cross
+    spec: Dict[str, Any] = {}
+    if cfg.has_attention:
+        spec["k"] = PS(
+            (n_self, batch_size, w, cfg.n_kv_heads, cfg.hd),
+            ("layers", "batch", "kv_seq", "kv_heads", None),
+            "zeros",
+        )
+        spec["v"] = dataclasses.replace(spec["k"])
+    if cfg.has_ssm:
+        conv_c = cfg.d_inner + 2 * cfg.ssm_n_groups * cfg.ssm_state
+        spec["conv"] = PS(
+            (n_self, batch_size, cfg.ssm_conv_width - 1, conv_c),
+            ("layers", "batch", None, None),
+            "zeros",
+        )
+        spec["state"] = PS(
+            (n_self, batch_size, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+            ("layers", "batch", "ssm_heads", None, "state"),
+            "zeros",
+        )
+    if n_cross:
+        spec["img_k"] = PS(
+            (n_cross, batch_size, cfg.n_image_tokens, cfg.n_kv_heads, cfg.hd),
+            ("stack", "batch", "image", "kv_heads", None),
+            "zeros",
+        )
+        spec["img_v"] = dataclasses.replace(spec["img_k"])
+    return spec
+
+
+def prefill(
+    cfg: ModelConfig, params, batch, max_cache_len: int = 0
+) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    """Process the full prompt; return last-position logits + decode cache.
+
+    `max_cache_len` sizes the full-attention KV cache for subsequent decode
+    steps (defaults to prompt length + 1; windowed/SSM caches are fixed-size).
+    """
+    x = _embed_tokens(cfg, params, batch)
+    b, s = x.shape[:2]
+    max_cache_len = max_cache_len or (s + 1)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    cache: Dict[str, Any] = {}
+    img_kv = None
+    if cfg.cross_attn_every:
+        img_kv = _cross_kv_all(cfg, params, batch["image_embeds"].astype(x.dtype))
+        cache["img_k"], cache["img_v"] = img_kv
+
+    def body(carry, lp):
+        y = carry
+        out_cache = {}
+        h = lyr.rms_norm(y, lp["ln1"], cfg.norm_eps)
+        if cfg.arch_type == "ssm":
+            out, (conv, st) = ssm_lib.ssm_block(lp["ssm"], h, cfg, return_cache=True)
+            y = y + out
+            out_cache["conv"], out_cache["state"] = conv, st
+        else:
+            attn_out, (ck, cv) = lyr.attn_block(
+                lp["attn"], h, cfg, positions, return_cache=True,
+                max_cache_len=max_cache_len,
+            )
+            out_cache["k"], out_cache["v"] = ck, cv
+            if cfg.hybrid:
+                s_out, (conv, st) = ssm_lib.ssm_block(lp["ssm"], h, cfg, return_cache=True)
+                attn_out = 0.5 * (attn_out + s_out)
+                out_cache["conv"], out_cache["state"] = conv, st
+            y = y + attn_out
+            h2 = lyr.rms_norm(y, lp["ln2"], cfg.norm_eps)
+            if cfg.arch_type == "moe":
+                moe_fn = (
+                    moe_block_shard_map if cfg.moe_impl == "shard_map" else lyr.moe_block
+                )
+                m, _ = moe_fn(lp["moe"], h2, cfg)
+                if cfg.dense_residual:
+                    m = m + lyr.swiglu(lp["mlp"], h2)
+                y = y + m
+            else:
+                y = y + lyr.swiglu(lp["mlp"], h2)
+        return y, out_cache
+
+    un = cfg.scan_unroll
+    if not cfg.cross_attn_every:
+        x, layer_cache = jax.lax.scan(
+            body, x, params["layers"], unroll=cfg.n_layers if un else 1
+        )
+    else:
+        cae = cfg.cross_attn_every
+        n_cross = cfg.n_layers // cae
+        grouped = jax.tree.map(
+            lambda t: t.reshape((n_cross, cae - 1) + t.shape[1:]), params["layers"]
+        )
+
+        def group_body(carry, inp):
+            gp, cp, gk, gv = inp
+            y, gcache = jax.lax.scan(body, carry, gp, unroll=(cae - 1) if un else 1)
+            y = lyr.cross_attn_block(cp, y, cfg, gk, gv)
+            return y, gcache
+
+        x, layer_cache = jax.lax.scan(
+            group_body, x, (grouped, params["cross"], img_kv[0], img_kv[1]),
+            unroll=n_cross if un else 1,
+        )
+        # [G, per, ...] -> [L_self, ...]
+        layer_cache = jax.tree.map(
+            lambda t: t.reshape((-1,) + t.shape[2:]), layer_cache
+        )
+    # attention KV is cached transposed to [L, B, W, Hkv, hd] already
+    cache.update(layer_cache)
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch):
+    """One-token decode. batch = {"token": [B,1(,K)], "pos": scalar int32}."""
+    x = _embed_tokens(cfg, params, {"tokens": batch["token"]})
+    pos = batch["pos"]
+
+    def body(carry, inp):
+        y = carry
+        lp, lc = inp
+        new_cache = {}
+        h = lyr.rms_norm(y, lp["ln1"], cfg.norm_eps)
+        if cfg.arch_type == "ssm":
+            out, conv, st = ssm_lib.ssm_decode(lp["ssm"], h, cfg, lc["conv"], lc["state"])
+            y = y + out
+            new_cache["conv"], new_cache["state"] = conv, st
+        else:
+            attn_out, ck, cv = lyr.attn_decode(lp["attn"], h, cfg, lc["k"], lc["v"], pos)
+            new_cache["k"], new_cache["v"] = ck, cv
+            if cfg.hybrid:
+                s_out, conv, st = ssm_lib.ssm_decode(
+                    lp["ssm"], h, cfg, lc["conv"], lc["state"]
+                )
+                attn_out = 0.5 * (attn_out + s_out)
+                new_cache["conv"], new_cache["state"] = conv, st
+            y = y + attn_out
+            h2 = lyr.rms_norm(y, lp["ln2"], cfg.norm_eps)
+            if cfg.arch_type == "moe":
+                moe_fn = (
+                    moe_block_shard_map if cfg.moe_impl == "shard_map" else lyr.moe_block
+                )
+                m, _ = moe_fn(lp["moe"], h2, cfg)
+                if cfg.dense_residual:
+                    m = m + lyr.swiglu(lp["mlp"], h2)
+                y = y + m
+            else:
+                y = y + lyr.swiglu(lp["mlp"], h2)
+        return y, new_cache
+
+    un = cfg.scan_unroll
+    layer_cache = {k: v for k, v in cache.items() if k not in ("img_k", "img_v")}
+    if not cfg.cross_attn_every:
+        x, new_layer_cache = jax.lax.scan(
+            body, x, (params["layers"], layer_cache),
+            unroll=cfg.n_layers if un else 1,
+        )
+    else:
+        cae = cfg.cross_attn_every
+        n_cross = cfg.n_layers // cae
+        grouped = jax.tree.map(
+            lambda t: t.reshape((n_cross, cae - 1) + t.shape[1:]), params["layers"]
+        )
+        gcache = jax.tree.map(
+            lambda t: t.reshape((n_cross, cae - 1) + t.shape[1:]), layer_cache
+        )
+
+        def group_body(carry, inp):
+            gp, cp, gc, gk, gv = inp
+            y, new_gc = jax.lax.scan(body, carry, (gp, gc), unroll=(cae - 1) if un else 1)
+            y = lyr.cross_attn_block(cp, y, cfg, gk, gv)
+            return y, new_gc
+
+        x, new_layer_cache = jax.lax.scan(
+            group_body,
+            x,
+            (grouped, params["cross"], gcache, cache["img_k"], cache["img_v"]),
+            unroll=n_cross if un else 1,
+        )
+        new_layer_cache = jax.tree.map(
+            lambda t: t.reshape((-1,) + t.shape[2:]), new_layer_cache
+        )
+    new_cache = dict(new_layer_cache)
+    if cfg.cross_attn_every:
+        new_cache["img_k"], new_cache["img_v"] = cache["img_k"], cache["img_v"]
+    return _logits(cfg, params, x), new_cache

@@ -1,0 +1,119 @@
+"""Expert-parallel MoE via shard_map (the §Perf optimized dispatch).
+
+The baseline GSPMD scatter dispatch (layers.moe_block) builds a GLOBAL
+[E*C, D] buffer; on the production mesh XLA cannot prove the scatter local
+and replicates both the buffer and most of the expert compute across the
+"model" axis (measured: arctic-480b train flops/device ~19x the 6*N_active*D
+floor). This implementation pins the data flow explicitly:
+
+  * tokens are sharded over ("pod","data") and REPLICATED over "model"
+    (standard TP layout of the residual stream);
+  * each "model" shard owns E/m experts and scatters only the assignments
+    routed to its slice into a LOCAL [E/m, C, D] buffer (no collective);
+  * expert FFN runs on the local slice; the combine is a single
+    psum over "model" — the same all-reduce the dense TP layer already pays.
+
+Per-device expert FLOPs drop from ~E-replicated to T_local*k/m*3*2*d*ff —
+the 6*N_active*D floor.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = ["moe_block_shard_map"]
+
+
+def _batch_axes(mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def moe_block_shard_map(
+    p: dict, x: jnp.ndarray, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Drop-in replacement for layers.moe_block under an active mesh."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        from repro.models.layers import moe_block  # no TP axis: GSPMD path
+
+        return moe_block(p, x, cfg)
+
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    m = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+    assert e % m == 0, f"experts {e} must divide model axis {m}"
+    e_local = e // m
+    baxes = _batch_axes(mesh)
+    dp = int(np.prod([dict(zip(mesh.axis_names, mesh.axis_sizes))[a] for a in baxes])) or 1
+    t_local = (b // dp) * s
+    cap = max(int(np.ceil(t_local * k / e * cfg.capacity_factor)), 1)
+
+    # aux losses from a (cheap) global router pass — keeps shard_map output
+    # replicated-scalar free (see module docstring)
+    xt = x.reshape(b * s, d)
+    logits_g = jnp.einsum("td,de->te", xt, p["router"]).astype(jnp.float32)
+    probs_g = jax.nn.softmax(logits_g, axis=-1)
+    top1 = jnp.argmax(probs_g, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs_g, axis=0)
+    lb = e * jnp.sum(frac_tokens * frac_probs) * cfg.load_balance_weight
+    z = jnp.mean(jax.nn.logsumexp(logits_g, axis=-1) ** 2) * cfg.router_z_weight
+    aux = lb + z
+
+    def local(x_l, router, wg, wu, wd):
+        # x_l: [B_l, S, D] (replicated over "model"); wg/wu/wd: [E/m, ...]
+        bl = x_l.shape[0]
+        tl = bl * s
+        xt_l = x_l.reshape(tl, d)
+        logits = jnp.einsum("td,de->te", xt_l, router).astype(jnp.float32)
+        top_w, top_e = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), k)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+        shard = jax.lax.axis_index("model")
+        lo = shard * e_local
+        flat_e = top_e.reshape(-1)  # [T_l*k] global expert ids
+        mine = (flat_e >= lo) & (flat_e < lo + e_local)
+        local_e = jnp.where(mine, flat_e - lo, 0)
+        # position within the expert's buffer (count only my assignments)
+        onehot = jax.nn.one_hot(local_e, e_local, dtype=jnp.int32) * mine[:, None]
+        pos = (jnp.cumsum(onehot, axis=0) - onehot)
+        slot = jnp.take_along_axis(pos, local_e[:, None], axis=1)[:, 0]
+        keep = mine & (slot < cap)
+        target = jnp.where(keep, local_e * cap + slot, e_local * cap)
+
+        data = jnp.repeat(xt_l, k, axis=0) * keep[:, None].astype(x_l.dtype)
+        buf = jnp.zeros((e_local * cap + 1, d), x_l.dtype).at[target].add(data)
+        buf = buf[: e_local * cap].reshape(e_local, cap, d)
+
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg)) * jnp.einsum(
+            "ecd,edf->ecf", buf, wu
+        )
+        out_buf = jnp.einsum("ecf,efd->ecd", h, wd).reshape(e_local * cap, d)
+        out_buf = jnp.concatenate([out_buf, jnp.zeros((1, d), x_l.dtype)], axis=0)
+
+        gathered = out_buf[target]
+        w = (top_w.reshape(-1) * keep).astype(x_l.dtype)
+        y = (gathered * w[:, None]).reshape(tl, k, d).sum(axis=1)
+        # combine partial contributions from every expert shard
+        y = jax.lax.psum(y, "model")
+        return y.reshape(bl, s, d)
+
+    y = jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(
+            P(baxes or None, None, None),  # x: batch-sharded, model-replicated
+            P(None, None),  # router replicated
+            P("model", None, None),  # experts sharded
+            P("model", None, None),
+            P("model", None, None),
+        ),
+        out_specs=P(baxes or None, None, None),
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return y, aux

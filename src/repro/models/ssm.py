@@ -1,0 +1,211 @@
+"""Mamba-2 SSD (state-space duality) blocks — arXiv:2405.21060.
+
+Chunked SSD for train/prefill (intra-chunk quadratic on the MXU + inter-chunk
+recurrence over nc = S/chunk steps), exact O(1)-state recurrent decode. This
+is the TPU-native adaptation (DESIGN.md §4): the chunk size is the MXU tile
+knob, the inter-chunk scan is `lax.scan` over stacked chunk states, and heads
+shard over the "model" mesh axis.
+
+Shapes follow the paper: x [B,S,H,P], dt [B,S,H], A [H] (log-parametrized),
+B/C [B,S,G,N] with G groups broadcast over heads.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.sharding import logical_constraint as shard
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm
+
+__all__ = ["ssd_chunked", "ssm_block", "ssm_decode", "ssm_conv_decode"]
+
+
+def _repeat_groups(t: jnp.ndarray, h: int) -> jnp.ndarray:
+    """[B,S,G,N] -> [B,S,H,N] broadcasting groups over heads."""
+    g = t.shape[2]
+    if g == h:
+        return t
+    return jnp.repeat(t, h // g, axis=2)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # [B, S, H, P] (pre-discretization input)
+    dt: jnp.ndarray,  # [B, S, H] softplus'd step sizes
+    a_log: jnp.ndarray,  # [H]
+    b_mat: jnp.ndarray,  # [B, S, G, N]
+    c_mat: jnp.ndarray,  # [B, S, G, N]
+    chunk: int,
+    init_state: jnp.ndarray | None = None,  # [B, H, P, N]
+    unroll: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))  # [H], negative
+
+    xd = (x * dt[..., None]).astype(jnp.float32)  # discretized input
+    adt = (a * dt.astype(jnp.float32)).reshape(bsz, nc, chunk, h)  # log decays
+    xd = xd.reshape(bsz, nc, chunk, h, p)
+    bh = _repeat_groups(b_mat, h).reshape(bsz, nc, chunk, h, n).astype(jnp.float32)
+    ch = _repeat_groups(c_mat, h).reshape(bsz, nc, chunk, h, n).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(adt, axis=2)  # [B,nc,l,H] within-chunk cumulative decay
+
+    # ---- intra-chunk (diagonal blocks): quadratic attention-like form
+    li = a_cum[:, :, :, None, :]  # query position l
+    lj = a_cum[:, :, None, :, :]  # key position s
+    causal = (
+        jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+    )[None, None, :, :, None]
+    # exponent is <=0 in the causal region; clamp to avoid inf in masked slots
+    l_mat = jnp.where(causal, jnp.exp(jnp.minimum(li - lj, 0.0)), 0.0)  # [B,nc,l,s,H]
+    scores = jnp.einsum("bclhn,bcshn->bclsh", ch, bh)
+    y_diag = jnp.einsum("bclsh,bcshp->bclhp", scores * l_mat, xd)
+
+    # ---- chunk summary states: contribution of each chunk to the carried state
+    seg_decay = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # [B,nc,l,H]
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", bh, seg_decay, xd)
+
+    # ---- inter-chunk recurrence (lax.scan over nc chunks)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])  # [B,nc,H]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    else:
+        init_state = init_state.astype(jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp  # [B,H,P,N], [B,H]
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    final, prev = jax.lax.scan(
+        step,
+        init_state,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+        unroll=nc if unroll else 1,
+    )
+    prev = prev.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    # ---- off-diagonal: carried state read out at each position
+    state_decay = jnp.exp(a_cum)  # [B,nc,l,H]
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", ch, prev, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d. xbc: [B,S,C]; w: [K,C]; b: [C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _split_zxbcdt(zxbcdt: jnp.ndarray, cfg: ModelConfig):
+    di = cfg.d_inner
+    gn = cfg.ssm_n_groups * cfg.ssm_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * gn]
+    dt = zxbcdt[..., 2 * di + 2 * gn :]
+    return z, xbc, dt
+
+
+def ssm_block(
+    p: dict,
+    x: jnp.ndarray,  # [B, S, D] (already normed)
+    cfg: ModelConfig,
+    return_cache: bool = False,
+):
+    """Full-sequence Mamba-2 block (train / prefill)."""
+    bsz, s, d = x.shape
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_groups
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc, dt = _split_zxbcdt(zxbcdt, cfg)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di].reshape(bsz, s, h, pdim)
+    xs = shard(xs, "batch", None, "ssm_heads", None)
+    b_mat = xbc[..., di : di + g * n].reshape(bsz, s, g, n)
+    c_mat = xbc[..., di + g * n :].reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+
+    # pad to a chunk multiple with dt=0 positions: exp(0)=1 decay and zero
+    # input make padding an exact identity on the carried state
+    pad = (-s) % cfg.ssm_chunk
+    xs_p, b_p, c_p, dt_p = xs, b_mat, c_mat, dt
+    if pad:
+        xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b_p = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_p = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    y, final_state = ssd_chunked(
+        xs_p, dt_p, p["a_log"], b_p, c_p, cfg.ssm_chunk, unroll=cfg.scan_unroll
+    )
+    if pad:
+        y = y[:, :s]
+    y = y + xs * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    out = shard(out, "batch", "act_seq", None)
+    if not return_cache:
+        return out
+    conv_state = xbc_raw_tail(zxbcdt, cfg, s)
+    return out, (conv_state, final_state.astype(x.dtype))
+
+
+def xbc_raw_tail(zxbcdt: jnp.ndarray, cfg: ModelConfig, s: int) -> jnp.ndarray:
+    """Last (conv_width-1) pre-conv xBC rows — the decode conv cache."""
+    _, xbc, _ = _split_zxbcdt(zxbcdt, cfg)
+    k = cfg.ssm_conv_width
+    return xbc[:, s - (k - 1) :, :]
+
+
+def ssm_decode(
+    p: dict,
+    x: jnp.ndarray,  # [B, 1, D] (already normed)
+    cfg: ModelConfig,
+    conv_state: jnp.ndarray,  # [B, K-1, C]
+    ssd_state: jnp.ndarray,  # [B, H, P, N]
+):
+    """One-token recurrent decode: O(1) in sequence length."""
+    bsz = x.shape[0]
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_n_groups
+    h, pdim = cfg.ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z, xbc_new, dt = _split_zxbcdt(zxbcdt, cfg)
+    window = jnp.concatenate([conv_state, xbc_new], axis=1)  # [B, K, C]
+    new_conv_state = window[:, 1:]
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    )[:, None, :]
+    xs = conv_out[..., :di].reshape(bsz, h, pdim)
+    b_mat = conv_out[..., di : di + g * n].reshape(bsz, g, n)
+    c_mat = conv_out[..., di + g * n :].reshape(bsz, g, n)
+    rep = h // g
+    b_h = jnp.repeat(b_mat, rep, axis=1)  # [B,H,N]
+    c_h = jnp.repeat(c_mat, rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"]).reshape(bsz, h)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)  # [B,H]
+
+    st = ssd_state.astype(jnp.float32)
+    st = st * da[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dt, b_h.astype(jnp.float32), xs.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", c_h.astype(jnp.float32), st)
+    y = y.astype(x.dtype) + xs * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di)
+    y = rms_norm(y, p["norm"], cfg.norm_eps) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, new_conv_state, st.astype(ssd_state.dtype)

@@ -1,0 +1,29 @@
+"""Pure-JAX pytree optimizers (no optax in the offline container).
+
+Interface mirrors the familiar gradient-transformation style:
+
+    opt = adamw(lr=1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+"""
+from repro.optim.base import Optimizer, apply_updates, global_norm, clip_by_global_norm
+from repro.optim.adamw import adam, adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.sgd import sgd
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine, linear_warmup
+
+__all__ = [
+    "Optimizer",
+    "apply_updates",
+    "global_norm",
+    "clip_by_global_norm",
+    "adam",
+    "adamw",
+    "adafactor",
+    "sgd",
+    "constant",
+    "cosine_decay",
+    "warmup_cosine",
+    "linear_warmup",
+]

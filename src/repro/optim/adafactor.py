@@ -1,0 +1,81 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments.
+
+Used for the very large assigned architectures (arctic-480b, dbrx-132b,
+command-r-plus-104b) where full Adam state does not fit the pod's HBM; the
+factored statistics cut optimizer memory from 2x params (fp32) to ~1/row+col.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, PyTree, as_schedule
+
+
+class AdafactorState(NamedTuple):
+    step: jnp.ndarray
+    # per-leaf: either (vr, vc) factored or (v,) full, stored as dicts
+    stats: PyTree
+
+
+def _should_factor(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2
+
+
+def adafactor(
+    lr,
+    decay_rate: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    min_dim_size_to_factor: int = 2,
+) -> Optimizer:
+    sched = as_schedule(lr)
+
+    def _init_leaf(p):
+        if _should_factor(p.shape):
+            vr = jnp.zeros(p.shape[:-1], dtype=jnp.float32)  # row stats
+            vc = jnp.zeros(p.shape[:-2] + p.shape[-1:], dtype=jnp.float32)  # col stats
+            return {"vr": vr, "vc": vc}
+        return {"v": jnp.zeros(p.shape, dtype=jnp.float32)}
+
+    def init(params: PyTree) -> AdafactorState:
+        stats = jax.tree.map(_init_leaf, params)
+        return AdafactorState(step=jnp.zeros((), jnp.int32), stats=stats)
+
+    def update(grads: PyTree, state: AdafactorState, params: PyTree):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta2 = 1.0 - t ** (-decay_rate)
+        lr_t = sched(step)
+
+        def upd_leaf(g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                # factored preconditioner
+                r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                precond = (
+                    g / (jnp.sqrt(r)[..., None] * jnp.sqrt(vc)[..., None, :] + eps)
+                )
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                precond = g / (jnp.sqrt(v) + eps)
+                new_s = {"v": v}
+            # update clipping (RMS of update <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(precond)) + eps)
+            precond = precond / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * precond, new_s
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state.stats)
+        out = [upd_leaf(g, s) for g, s in zip(flat_g, flat_s)]
+        updates = treedef.unflatten([u for u, _ in out])
+        stats = treedef.unflatten([s for _, s in out])
+        return updates, AdafactorState(step=step, stats=stats)
+
+    return Optimizer(init=init, update=update)

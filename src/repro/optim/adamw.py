@@ -1,0 +1,63 @@
+"""Adam / AdamW with decoupled weight decay (Loshchilov & Hutter)."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, PyTree, as_schedule
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    mu: PyTree
+    nu: PyTree
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    mu_dtype=jnp.float32,
+) -> Optimizer:
+    sched = as_schedule(lr)
+
+    def init(params: PyTree) -> AdamState:
+        mu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=mu_dtype), params)
+        nu = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), mu=mu, nu=nu)
+
+    def update(grads: PyTree, state: AdamState, params: PyTree):
+        step = state.step + 1
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        mu = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(mu_dtype), state.mu, grads
+        )
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu,
+            grads,
+        )
+
+        def upd(m, v, p):
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v / bc2
+            u = -lr_t * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(jnp.float32)
+
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0)

@@ -1,0 +1,40 @@
+"""Optimizer base types and pytree helpers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]  # step -> lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """A gradient transformation: (grads, state, params) -> (updates, state)."""
+
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], Tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> Tuple[PyTree, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda x: x * scale, tree), norm
+
+
+def as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, dtype=jnp.float32)

@@ -1,0 +1,36 @@
+"""Learning-rate schedules (step -> lr), pure functions of a jnp step."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return peak * jnp.minimum(1.0, s / max(warmup_steps, 1))
+
+    return fn
+
+
+def cosine_decay(init: float, decay_steps: int, alpha: float = 0.0):
+    def fn(step):
+        s = jnp.minimum(step.astype(jnp.float32), decay_steps)
+        frac = 0.5 * (1.0 + jnp.cos(jnp.pi * s / max(decay_steps, 1)))
+        return init * ((1 - alpha) * frac + alpha)
+
+    return fn
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int, floor: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * jnp.minimum(1.0, s / max(warmup_steps, 1))
+        t = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.where(s < warmup_steps, warm, cos)
+
+    return fn

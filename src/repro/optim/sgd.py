@@ -1,0 +1,38 @@
+"""SGD with (Nesterov) momentum."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer, PyTree, as_schedule
+
+
+class SgdState(NamedTuple):
+    step: jnp.ndarray
+    momentum: PyTree
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    sched = as_schedule(lr)
+
+    def init(params: PyTree) -> SgdState:
+        m = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+        return SgdState(step=jnp.zeros((), jnp.int32), momentum=m)
+
+    def update(grads: PyTree, state: SgdState, params: PyTree):
+        step = state.step + 1
+        lr_t = sched(step)
+        m = jax.tree.map(
+            lambda m_, g: momentum * m_ + g.astype(jnp.float32), state.momentum, grads
+        )
+        if nesterov:
+            upd = jax.tree.map(
+                lambda m_, g: -lr_t * (momentum * m_ + g.astype(jnp.float32)), m, grads
+            )
+        else:
+            upd = jax.tree.map(lambda m_: -lr_t * m_, m)
+        return upd, SgdState(step=step, momentum=m)
+
+    return Optimizer(init=init, update=update)

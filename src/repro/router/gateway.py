@@ -1,0 +1,112 @@
+"""SemanticRouter: the serving-plane gateway (paper Fig. 1b / Fig. 2 top).
+
+Per request: embed the query (CPU), score against the ToolsDatabase
+(similarity (+ optional lexical blend) (+ optional MLP re-rank)), attach the
+top-K tools, and dispatch to a backend model pool. All learning lives in the
+offline control plane (`repro.core`); this module never touches a gradient.
+
+The router is deliberately stateless across requests (production routers are
+horizontally-scaled proxies); the only mutable state is the swappable
+embedding table inside ToolsDatabase and the outcome log sink.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import reranker as reranker_lib
+from repro.core.features import OutcomeFeaturizer
+from repro.router.tooldb import ToolsDatabase
+
+__all__ = ["RouteResult", "OutcomeEvent", "SemanticRouter"]
+
+
+@dataclasses.dataclass
+class RouteResult:
+    tools: List[int]  # selected tool ids (top-K)
+    scores: List[float]
+    latency_ms: float
+    pool: str  # backend pool the request was dispatched to
+    table_version: int
+
+
+@dataclasses.dataclass
+class OutcomeEvent:
+    """A logged outcome tuple (q_j, t_i, o_j) (§4.1 step 1)."""
+
+    query_tokens: np.ndarray
+    tool_id: int
+    outcome: int  # {0, 1}
+    timestamp: float
+
+
+class SemanticRouter:
+    def __init__(
+        self,
+        db: ToolsDatabase,
+        embed_fn: Callable[[np.ndarray], np.ndarray],  # tokens -> [384]
+        k: int = 5,
+        mlp_params: Optional[dict] = None,
+        featurizer: Optional[OutcomeFeaturizer] = None,
+        candidate_multiplier: int = 5,
+        pool_selector: Optional[Callable[[np.ndarray, List[int]], str]] = None,
+    ):
+        self.db = db
+        self.embed_fn = embed_fn
+        self.k = k
+        self.mlp_params = mlp_params
+        self.featurizer = featurizer
+        self.candidate_multiplier = candidate_multiplier
+        self.pool_selector = pool_selector or (lambda q, tools: "default")
+        self.outcome_log: List[OutcomeEvent] = []
+
+    # ---------------------------------------------------------- serving path
+    def route(self, query_tokens: np.ndarray) -> RouteResult:
+        t0 = time.perf_counter()
+        q = self.embed_fn(query_tokens)  # [384]
+        table = self.db.embeddings
+        sims = table @ q  # [T]
+        if self.mlp_params is not None and self.featurizer is not None:
+            c = min(self.k * self.candidate_multiplier, len(self.db))
+            order = np.argpartition(-sims, c - 1)[:c]
+            order = order[np.argsort(-sims[order], kind="stable")]
+            feats = self.featurizer.features(
+                q[None], [query_tokens], order[None], sims[order][None]
+            )
+            top = np.asarray(
+                reranker_lib.rerank_topk(
+                    self.mlp_params, jnp.asarray(feats), jnp.asarray(order[None]), self.k
+                )
+            )[0]
+        else:
+            top = np.argpartition(-sims, min(self.k, len(sims) - 1))[: self.k]
+            top = top[np.argsort(-sims[top], kind="stable")]
+        latency_ms = (time.perf_counter() - t0) * 1e3
+        pool = self.pool_selector(q, [int(t) for t in top])
+        return RouteResult(
+            tools=[int(t) for t in top],
+            scores=[float(sims[t]) for t in top],
+            latency_ms=latency_ms,
+            pool=pool,
+            table_version=self.db.table_version,
+        )
+
+    # ------------------------------------------------------------ feedback
+    def record_outcome(self, query_tokens: np.ndarray, tool_id: int, outcome: int):
+        self.outcome_log.append(
+            OutcomeEvent(
+                query_tokens=query_tokens,
+                tool_id=tool_id,
+                outcome=int(outcome),
+                timestamp=time.time(),
+            )
+        )
+
+    def drain_outcomes(self) -> List[OutcomeEvent]:
+        """Hand the accumulated log to the offline refinement job."""
+        log, self.outcome_log = self.outcome_log, []
+        return log

@@ -1,0 +1,59 @@
+"""Latency measurement harness (paper §5.5, Tables 1 & 6).
+
+Measures per-request p50/p99 wall-clock on a single CPU process, covering
+embedding computation, similarity search, and any re-ranking overhead —
+exactly the paper's protocol. The embedding forward uses the MiniLM-shaped
+22M-parameter transformer (repro.embedding.transformer), so the dominant cost
+term matches the production router's, independent of weight values.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Sequence
+
+import numpy as np
+
+__all__ = ["LatencyStats", "measure_latency", "percentile_stats"]
+
+
+@dataclasses.dataclass
+class LatencyStats:
+    p50_ms: float
+    p99_ms: float
+    mean_ms: float
+    n: int
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "p50_ms": self.p50_ms,
+            "p99_ms": self.p99_ms,
+            "mean_ms": self.mean_ms,
+            "n": self.n,
+        }
+
+
+def percentile_stats(samples_ms: Sequence[float]) -> LatencyStats:
+    arr = np.asarray(samples_ms, dtype=np.float64)
+    return LatencyStats(
+        p50_ms=float(np.percentile(arr, 50)),
+        p99_ms=float(np.percentile(arr, 99)),
+        mean_ms=float(arr.mean()),
+        n=len(arr),
+    )
+
+
+def measure_latency(
+    serve_one: Callable[[int], object],
+    n_requests: int,
+    warmup: int = 20,
+) -> LatencyStats:
+    """Time `serve_one(i)` per request (one at a time — router semantics)."""
+    for i in range(min(warmup, n_requests)):
+        serve_one(i)
+    samples: List[float] = []
+    for i in range(n_requests):
+        t0 = time.perf_counter()
+        serve_one(i)
+        samples.append((time.perf_counter() - t0) * 1e3)
+    return percentile_stats(samples)

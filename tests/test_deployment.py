@@ -1,0 +1,38 @@
+"""Paper §7.2-7.3 deployment policy tests."""
+from hypothesis import given, settings, strategies as st
+
+from repro.core.deployment import recommend_stages
+
+
+def test_toolbench_regime_rejects_mlp():
+    # 357 train queries x ~2 labels over 2,413 tools: <0.15 examples/tool
+    plan = recommend_stages(n_tools=2413, n_outcome_examples=700)
+    assert plan.refine and not plan.mlp_reranker
+    assert "hurt" in plan.reason or "adapter" in plan.reason
+
+
+def test_metatool_regime():
+    # ~13 examples/tool, 199 tools -> refinement alone per §7.3 (<200 tools)
+    plan = recommend_stages(n_tools=199, n_outcome_examples=2600)
+    assert plan.refine
+    assert not plan.mlp_reranker  # small set: refinement alone
+
+
+def test_midsize_dense_logs_enables_mlp():
+    plan = recommend_stages(n_tools=300, n_outcome_examples=6000)
+    assert plan.mlp_reranker
+
+
+def test_large_set_abundant_logs_enables_adapter():
+    plan = recommend_stages(n_tools=2413, n_outcome_examples=50_000)
+    assert plan.contrastive_adapter and not plan.mlp_reranker
+
+
+@given(st.integers(1, 5000), st.integers(0, 100_000))
+@settings(max_examples=50, deadline=None)
+def test_refinement_always_on_and_stages_consistent(n_tools, n_logs):
+    plan = recommend_stages(n_tools, n_logs)
+    assert plan.refine  # zero-cost, gate-protected: always deploy
+    assert plan.stages >= {"refine"}
+    if plan.mlp_reranker:
+        assert plan.density >= 10.0

@@ -1,0 +1,137 @@
+"""Multi-device distribution tests (subprocess with forced host devices).
+
+The main pytest process must keep seeing 1 CPU device (conftest guarantee),
+so each case runs in a child interpreter with
+XLA_FLAGS=--xla_force_host_platform_device_count=4 and asserts parity
+between the GSPMD baseline and the shard_map §Perf implementations.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+PRELUDE = """
+import dataclasses, jax, jax.numpy as jnp, numpy as np
+from jax.sharding import AxisType
+from repro.common.sharding import set_policy
+from repro.configs import get_config
+from repro.models.config import reduced
+from repro.models import model as M
+mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+"""
+
+
+@pytest.mark.slow
+def test_shard_map_moe_matches_gspmd_when_capacity_unbound():
+    _run(PRELUDE + """
+cfg = reduced(get_config("dbrx-132b"), capacity_factor=8.0)
+cfg2 = dataclasses.replace(cfg, moe_impl="shard_map")
+params = M.init(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)), jnp.int32)}
+with jax.set_mesh(mesh):
+    l1, _ = jax.jit(lambda p, b: M.forward(cfg, p, b))(params, batch)
+    l2, _ = jax.jit(lambda p, b: M.forward(cfg2, p, b))(params, batch)
+err = float(jnp.max(jnp.abs(l1 - l2)))
+assert err < 1e-4, err
+# gradients agree too
+g1 = jax.jit(jax.grad(lambda p: M.loss_fn(cfg, p, batch)[0]))(params)
+with jax.set_mesh(mesh):
+    g2 = jax.jit(jax.grad(lambda p: M.loss_fn(cfg2, p, batch)[0]))(params)
+gerr = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+           zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
+assert gerr < 1e-2, gerr
+print("moe parity ok", err, gerr)
+""")
+
+
+@pytest.mark.slow
+def test_seq_sharded_decode_matches_baseline():
+    _run(PRELUDE + """
+for arch in ("musicgen-medium", "stablelm-3b", "qwen2.5-3b", "hymba-1.5b"):
+    cfg = reduced(get_config(arch))
+    cfg2 = dataclasses.replace(cfg, decode_attn="seq_shard")
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, S = 2, 32
+    shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks else (B, S)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, shape), jnp.int32)
+    _, cache = M.prefill(cfg, params, {"tokens": toks[:, :S-1]}, max_cache_len=S)
+    dec = {"token": toks[:, S-1:S], "pos": jnp.asarray(S-1, jnp.int32)}
+    l1, c1 = M.decode_step(cfg, params, cache, dec)
+    with jax.set_mesh(mesh):
+        set_policy("tp_kvs")
+        l2, c2 = jax.jit(lambda p, c, b: M.decode_step(cfg2, p, c, b))(params, cache, dec)
+        set_policy("tp")
+    err = float(jnp.max(jnp.abs(l1 - l2)))
+    kerr = float(jnp.max(jnp.abs(c1["k"] - c2["k"])))
+    assert err < 2e-3 and kerr < 1e-3, (arch, err, kerr)
+    print(arch, "ok", err, kerr)
+""")
+
+
+@pytest.mark.slow
+def test_policies_all_lower_train_step():
+    _run(PRELUDE + """
+from repro.launch.specs import ShapeCase, input_specs
+from repro.launch.state_specs import opt_state_structs
+from repro.models.params import param_structs
+from repro.training.train_step import TrainConfig, make_train_step
+cfg = reduced(get_config("qwen2.5-3b"))
+shape = ShapeCase("t", 64, 8, "train")
+for policy in ("tp", "tp_sp", "fsdp"):
+    set_policy(policy)
+    specs = M.make_specs(cfg)
+    ps = param_structs(specs, dtype=jnp.float32, mesh=mesh)
+    batch = input_specs(cfg, shape, mesh)
+    step_fn, _ = make_train_step(cfg, TrainConfig(optimizer="adamw"))
+    os_ = opt_state_structs("adamw", specs, mesh)
+    with jax.set_mesh(mesh):
+        c = jax.jit(step_fn).lower(ps, os_, batch).compile()
+    assert c.cost_analysis()["flops"] > 0
+    print(policy, "lowers ok")
+set_policy("tp")
+""")
+
+
+@pytest.mark.slow
+def test_refinement_shards_over_tool_axis():
+    """Alg. 1 refinement is embarrassingly parallel in T (DESIGN.md §4):
+    sharding the tool table over devices gives identical embeddings."""
+    _run(PRELUDE + """
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.core.refine import refine_embeddings
+rng = np.random.default_rng(0)
+def unit(x): return x / np.linalg.norm(x, axis=-1, keepdims=True)
+qe = jnp.asarray(unit(rng.normal(size=(64, 32))).astype(np.float32))
+te = jnp.asarray(unit(rng.normal(size=(16, 32))).astype(np.float32))
+rel = np.zeros((64, 16), np.float32)
+rel[np.arange(64), rng.integers(0, 16, 64)] = 1.0
+rel = jnp.asarray(rel)
+ref = refine_embeddings(te, qe, rel)
+mesh1 = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
+with jax.set_mesh(mesh1):
+    te_s = jax.device_put(te, NamedSharding(mesh1, P("model", None)))
+    rel_s = jax.device_put(rel, NamedSharding(mesh1, P(None, "model")))
+    out = refine_embeddings(te_s, qe, rel_s)
+err = float(jnp.max(jnp.abs(ref - out)))
+assert err < 1e-5, err
+print("sharded refinement parity ok", err)
+""")

@@ -1,0 +1,77 @@
+"""Retrieval metrics: unit cases + hypothesis properties + jnp/np agreement."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.metrics.retrieval import (
+    batched_ndcg_at_k,
+    batched_recall_at_k,
+    evaluate_ranking,
+    mrr,
+    ndcg_at_k,
+    precision_at_k,
+    recall_at_k,
+)
+
+
+def test_known_values():
+    ranked = [3, 1, 2, 0, 4]
+    rel = {1, 4}
+    assert recall_at_k(ranked, rel, 1) == 0.0
+    assert recall_at_k(ranked, rel, 2) == 0.5
+    assert recall_at_k(ranked, rel, 5) == 1.0
+    assert precision_at_k(ranked, rel, 2) == 0.5
+    assert mrr(ranked, rel) == 0.5
+    # dcg = 1/log2(3) + 1/log2(6); idcg = 1 + 1/log2(3)
+    expected = (1 / np.log2(3) + 1 / np.log2(6)) / (1 + 1 / np.log2(3))
+    assert abs(ndcg_at_k(ranked, rel, 5) - expected) < 1e-9
+
+
+def test_empty_relevant():
+    assert recall_at_k([0, 1], [], 2) == 0.0
+    assert ndcg_at_k([0, 1], [], 2) == 0.0
+    assert mrr([0, 1], []) == 0.0
+
+
+@given(
+    st.integers(10, 40),  # n_tools
+    st.integers(1, 5),  # n_rel
+    st.integers(0, 10_000),  # seed
+)
+@settings(max_examples=50, deadline=None)
+def test_metric_bounds_and_perfect_ranking(n_tools, n_rel, seed):
+    rng = np.random.default_rng(seed)
+    rel = set(rng.choice(n_tools, size=n_rel, replace=False).tolist())
+    ranked = list(rng.permutation(n_tools))
+    m = evaluate_ranking(ranked, rel)
+    for k, v in m.items():
+        assert 0.0 <= v <= 1.0, (k, v)
+    # perfect ranking: relevant first
+    perfect = sorted(ranked, key=lambda t: t not in rel)
+    mp = evaluate_ranking(perfect, rel)
+    assert mp["mrr"] == 1.0
+    assert mp[f"ndcg@5"] == pytest.approx(1.0)
+    assert mp["recall@5"] >= m["recall@5"] - 1e-12
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=25, deadline=None)
+def test_batched_matches_scalar(seed):
+    rng = np.random.default_rng(seed)
+    q, t, k = 8, 20, 5
+    relevance = (rng.random((q, t)) < 0.15).astype(np.float32)
+    scores = rng.random((q, t)).astype(np.float32)
+    rankings = np.argsort(-scores, axis=1)[:, :k]
+    b_rec = float(batched_recall_at_k(jnp.asarray(rankings), jnp.asarray(relevance)))
+    b_ndcg = float(batched_ndcg_at_k(jnp.asarray(rankings), jnp.asarray(relevance)))
+    recs, ndcgs = [], []
+    for j in range(q):
+        rel = set(np.flatnonzero(relevance[j]).tolist())
+        if not rel:
+            continue
+        recs.append(recall_at_k(rankings[j], rel, k))
+        ndcgs.append(ndcg_at_k(rankings[j], rel, k))
+    if recs:
+        assert b_rec == pytest.approx(np.mean(recs), abs=1e-5)
+        assert b_ndcg == pytest.approx(np.mean(ndcgs), abs=1e-5)

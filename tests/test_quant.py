@@ -1,0 +1,60 @@
+"""Int8 weight quantization: roundtrip quality + decode-logit fidelity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHITECTURES
+from repro.models import model as M
+from repro.models.config import reduced
+from repro.models.quant import (
+    dequantize_tree,
+    quantize_tree,
+    quantized_bytes,
+    should_quantize,
+)
+
+
+def test_should_quantize_policy():
+    assert should_quantize((512, 512))
+    assert should_quantize((32, 2048, 128))
+    assert not should_quantize((512,))  # norms
+    assert not should_quantize((32, 8))  # tiny projections
+
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_roundtrip_error_bounded(seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(128, 256)).astype(np.float32))
+    q = quantize_tree({"w": w})
+    back = dequantize_tree(q, jnp.float32)["w"]
+    # per-channel int8: rounding <= scale/2, plus <= scale/2 from the bf16
+    # scale storage (2^-8 relative x |q|<=127) => 1 quantum total
+    col_max = np.abs(np.asarray(w)).max(axis=0)
+    assert (np.abs(np.asarray(back - w)) <= col_max[None, :] / 127 + 1e-6).all()
+
+
+def test_quantized_decode_logits_close():
+    cfg = reduced(ARCHITECTURES["qwen2.5-3b"])
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 32)), jnp.int32)
+    _, cache = M.prefill(cfg, params, {"tokens": toks[:, :31]}, max_cache_len=32)
+    dec = {"token": toks[:, 31:32], "pos": jnp.asarray(31, jnp.int32)}
+    l_ref, _ = M.decode_step(cfg, params, cache, dec)
+    qp = quantize_tree(params)
+    l_q, _ = M.decode_step(cfg, dequantize_tree(qp, jnp.float32), cache, dec)
+    # logits shift a little, but top-1 token agrees (what serving needs)
+    assert (jnp.argmax(l_ref, -1) == jnp.argmax(l_q, -1)).all()
+    rel = float(jnp.max(jnp.abs(l_ref - l_q)) / jnp.max(jnp.abs(l_ref)))
+    assert rel < 0.1, rel
+
+
+def test_quantized_bytes_halves_weights():
+    cfg = ARCHITECTURES["granite-3-8b"]
+    specs = M.make_specs(cfg)
+    qb = quantized_bytes(specs)
+    fb = 2 * cfg.param_count()
+    assert qb < 0.6 * fb  # ~2x smaller (scales overhead ~1%)
