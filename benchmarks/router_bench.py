@@ -1,0 +1,160 @@
+"""Batched-router serving benchmark: p50/p99 latency + queries/sec.
+
+  PYTHONPATH=src python -m benchmarks.router_bench [--smoke] [--out BENCH_router.json]
+
+Measures the gateway hot path (`SemanticRouter.route_batch`: batched embed ->
+one jitted similarity+top-K -> result assembly) at batch sizes {1, 8, 64, 256}
+on both paper table sizes (metatool-like 199 tools, toolbench-like 2,413
+tools), plus the sequential `route()` baseline the batch API replaces. The
+headline derived metric — batch-64 queries/sec over 64 sequential calls on
+the 2,413-tool table — is the speedup the ISSUE acceptance gate records.
+
+Results land in BENCH_router.json:
+  {"rows": [{table, n_tools, batch_size, p50_ms_per_query, ...}, ...],
+   "derived": {"speedup_batch64_vs_sequential_2413": ..., ...}}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import List
+
+import numpy as np
+
+BATCH_SIZES = (1, 8, 64, 256)
+
+
+def _build_router(bench, k: int = 5):
+    from repro.embedding.bag_encoder import BagEncoder
+    from repro.router.gateway import SemanticRouter
+    from repro.router.tooldb import ToolRecord, ToolsDatabase
+
+    enc = BagEncoder(bench.vocab)
+    records = [
+        ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
+        for i in range(bench.n_tools)
+    ]
+    db = ToolsDatabase(records, enc.encode(bench.desc_tokens))
+    return SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=k
+    )
+
+
+def _timed_loop(fn, n_calls: int, warmup: int, per_call_queries: int) -> dict:
+    """Run fn(i) n_calls times; aggregate per-query latency + throughput
+    through the canonical `percentile_stats` (one LatencyStats definition)."""
+    from repro.router.latency import percentile_stats
+
+    for i in range(warmup):
+        fn(i)
+    call_ms = []
+    t_all = time.perf_counter()
+    for i in range(n_calls):
+        t0 = time.perf_counter()
+        fn(i)
+        call_ms.append((time.perf_counter() - t0) * 1e3)
+    wall_s = time.perf_counter() - t_all
+    stats = percentile_stats(np.asarray(call_ms) / per_call_queries)
+    return {
+        "n_calls": n_calls,
+        "p50_ms_per_query": stats.p50_ms,
+        "p99_ms_per_query": stats.p99_ms,
+        "mean_ms_per_query": stats.mean_ms,
+        "qps": float(n_calls * per_call_queries / wall_s),
+    }
+
+
+def _bench_batched(router, queries: List[np.ndarray], batch_size: int,
+                   n_calls: int, warmup: int = 3) -> dict:
+    """Time `n_calls` route_batch calls of `batch_size` queries each.
+    Warmup covers jit compilation for this (Q, T) shape."""
+    n_q = len(queries)
+
+    def call(i):
+        router.route_batch(
+            [queries[(i * batch_size + j) % n_q] for j in range(batch_size)]
+        )
+
+    row = _timed_loop(call, n_calls, warmup, batch_size)
+    row["batch_size"] = batch_size
+    return row
+
+
+def _bench_sequential(router, queries: List[np.ndarray], n_requests: int,
+                      warmup: int = 3) -> dict:
+    """The pre-batching serving loop: one route() call per request."""
+    row = _timed_loop(
+        lambda i: router.route(queries[i % len(queries)]), n_requests, warmup, 1
+    )
+    row["batch_size"] = 0  # marker: sequential route() loop
+    return row
+
+
+def run(smoke: bool = False, seed: int = 0, out: str = "BENCH_router.json") -> dict:
+    from repro.data.benchmarks import make_metatool_like, make_toolbench_like
+
+    # fail on an unwritable destination BEFORE the minutes of measurement
+    if os.path.dirname(out):
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+
+    n_queries = 128 if smoke else 600
+    tables = {
+        "metatool-like": make_metatool_like(seed=seed, n_queries=n_queries),
+        "toolbench-like": make_toolbench_like(seed=seed, n_queries=n_queries),
+    }
+    batch_sizes = (1, 8, 64) if smoke else BATCH_SIZES
+    seq_requests = 16 if smoke else 64
+    rows = []
+    by_key = {}
+    for name, bench in tables.items():
+        router = _build_router(bench)
+        queries = list(bench.query_tokens)
+        seq = _bench_sequential(router, queries, seq_requests)
+        seq.update(table=name, n_tools=bench.n_tools, mode="sequential")
+        rows.append(seq)
+        by_key[(name, "seq")] = seq
+        print(f"{name:15s} T={bench.n_tools:5d} sequential      "
+              f"p50={seq['p50_ms_per_query']:.3f}ms p99={seq['p99_ms_per_query']:.3f}ms "
+              f"qps={seq['qps']:.0f}", flush=True)
+        for bs in batch_sizes:
+            n_calls = max(2, (4 if smoke else 32) * 64 // bs)
+            r = _bench_batched(router, queries, bs, n_calls)
+            r.update(table=name, n_tools=bench.n_tools, mode="batched")
+            rows.append(r)
+            by_key[(name, bs)] = r
+            print(f"{name:15s} T={bench.n_tools:5d} batch={bs:<4d}      "
+                  f"p50={r['p50_ms_per_query']:.3f}ms p99={r['p99_ms_per_query']:.3f}ms "
+                  f"qps={r['qps']:.0f}", flush=True)
+
+    tb = "toolbench-like"
+    derived = {
+        "speedup_batch64_vs_sequential_2413": (
+            by_key[(tb, 64)]["qps"] / by_key[(tb, "seq")]["qps"]
+        ),
+        "p99_batch64_ms_2413": by_key[(tb, 64)]["p99_ms_per_query"],
+        "latency_budget_ms": 10.0,
+        "smoke": smoke,
+    }
+    report = {"bench": "router_serving_path", "rows": rows, "derived": derived}
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"speedup(batch64 vs sequential, {tb}): "
+          f"{derived['speedup_batch64_vs_sequential_2413']:.1f}x | "
+          f"p99/query at batch 64: {derived['p99_batch64_ms_2413']:.3f}ms "
+          f"(budget {derived['latency_budget_ms']}ms) -> {out}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced scale for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_router.json")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, seed=args.seed, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

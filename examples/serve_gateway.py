@@ -12,6 +12,7 @@ main([
     "--arch", "hymba-1.5b", "--smoke",
     "--stage", "oats-s1",
     "--requests", "16",
+    "--route-batch", "8",
     "--max-new-tokens", "8",
     "--n-tools", "199",
     "--n-queries", "1500",

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 CI gate: full test suite + the router serving-path smoke benchmark.
+#
+#   bash scripts/ci_check.sh [extra pytest args...]
+#
+# The smoke bench writes BENCH_router_smoke.json (scaled-down batches/iters);
+# the full recorded numbers live in BENCH_router.json via
+#   PYTHONPATH=src python -m benchmarks.router_bench
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+
+python -m benchmarks.router_bench --smoke --out BENCH_router_smoke.json

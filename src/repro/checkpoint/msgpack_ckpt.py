@@ -1,24 +1,69 @@
-"""Msgpack + zstd pytree checkpointing (no orbax in the offline container).
+"""Msgpack + compressed pytree checkpointing (no orbax in the offline
+container).
 
-Layout: a single `.ckpt` file = zstd-compressed msgpack of
+Layout: a single `.ckpt` file = a 5-byte codec header (`b"CKPT" + codec id`)
+followed by the compressed msgpack of
   {"meta": {...}, "tree": <nested dicts>, "arrays": [raw buffers]}
 Arrays are stored as (dtype, shape, index) leaves referencing the buffer
 list, so restore is zero-copy into numpy and device_put'able with any
 sharding. Step-numbered files + a LATEST pointer give atomic-ish rotation.
+
+Compression codec: `zstandard` when importable, else stdlib `zlib`. The
+codec id in the header makes files self-describing, so checkpoints written
+with zstd restore on zlib-only containers *if* zstandard is present there —
+otherwise a clear error names the missing codec. Headerless legacy files
+(pre-header zstd blobs) are detected by the zstd magic and still restore.
 """
 from __future__ import annotations
 
 import os
+import zlib
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to stdlib zlib
+    zstandard = None
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
 
 _MARKER = "__array__"
+_MAGIC = b"CKPT"
+_CODEC_ZSTD = b"\x01"
+_CODEC_ZLIB = b"\x02"
+_ZSTD_FRAME_MAGIC = b"\x28\xb5\x2f\xfd"  # legacy headerless files
+
+
+def _compress(payload: bytes) -> bytes:
+    if zstandard is not None:
+        return _MAGIC + _CODEC_ZSTD + zstandard.ZstdCompressor(level=3).compress(payload)
+    return _MAGIC + _CODEC_ZLIB + zlib.compress(payload, 3)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _MAGIC:
+        codec, body = blob[4:5], blob[5:]
+        if codec == _CODEC_ZLIB:
+            return zlib.decompress(body)
+        if codec == _CODEC_ZSTD:
+            if zstandard is None:
+                raise RuntimeError(
+                    "checkpoint was written with zstd but zstandard is not "
+                    "installed in this container"
+                )
+            return zstandard.ZstdDecompressor().decompress(body, max_output_size=1 << 34)
+        raise ValueError(f"unknown checkpoint codec id {codec!r}")
+    if blob[:4] == _ZSTD_FRAME_MAGIC:  # legacy headerless zstd checkpoint
+        if zstandard is None:
+            raise RuntimeError(
+                "legacy zstd checkpoint requires the zstandard package"
+            )
+        return zstandard.ZstdDecompressor().decompress(blob, max_output_size=1 << 34)
+    raise ValueError("not a recognized checkpoint file (bad magic)")
 
 
 def _encode(tree: Any, buffers: list) -> Any:
@@ -49,14 +94,16 @@ def save_checkpoint(
     buffers: list = []
     host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
     enc = _encode(host_tree, buffers)
+    meta = dict(meta or {})
+    meta.setdefault("codec", "zstd" if zstandard is not None else "zlib")
     payload = msgpack.packb(
-        {"meta": meta or {}, "step": step, "tree": enc, "arrays": buffers},
+        {"meta": meta, "step": step, "tree": enc, "arrays": buffers},
         use_bin_type=True,
     )
     path = os.path.join(directory, f"step_{step:08d}.ckpt")
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(payload))
+        f.write(_compress(payload))
     os.replace(tmp, path)  # atomic rotate
     with open(os.path.join(directory, "LATEST"), "w") as f:
         f.write(str(step))
@@ -78,8 +125,6 @@ def restore_checkpoint(
         if step is None:
             raise FileNotFoundError(f"no checkpoint in {directory}")
     path = os.path.join(directory, f"step_{step:08d}.ckpt")
-    raw = zstandard.ZstdDecompressor().decompress(
-        open(path, "rb").read(), max_output_size=1 << 34
-    )
+    raw = _decompress(open(path, "rb").read())
     obj = msgpack.unpackb(raw, raw=False)
     return obj["step"], _decode(obj["tree"], obj["arrays"]), obj["meta"]

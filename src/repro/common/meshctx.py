@@ -1,0 +1,204 @@
+"""Version-portable mesh context: one place that knows how to ask JAX
+"which mesh is active?" and "make this mesh active".
+
+The mesh-context API has drifted across JAX releases:
+
+  * >= 0.5.x exposes ``jax.sharding.get_abstract_mesh`` / ``jax.set_mesh``
+    (earlier spelled ``jax.sharding.use_mesh``) and
+    ``jax.make_mesh(..., axis_types=...)`` with ``jax.sharding.AxisType``;
+  * 0.4.x keeps the same machinery under ``jax._src.mesh``
+    (``get_abstract_mesh``, ``thread_resources``) with activation via the
+    classic ``with mesh:`` resource-env context, ``jax.make_mesh`` without
+    ``axis_types``, and ``shard_map`` under ``jax.experimental.shard_map``;
+  * anything older still accepts a raw ``jax.sharding.Mesh`` context.
+
+Model/serving code must not care. The portability contract is:
+
+  * ``current_mesh()`` returns the active mesh (concrete or abstract) or
+    ``None``; never raises, never returns an *empty* mesh.
+  * ``use_mesh(mesh)`` is a context manager activating ``mesh`` so that
+    (a) ``current_mesh()`` sees it from any thread-locally nested code,
+    (b) bare-``PartitionSpec`` sharding constraints resolve inside ``jit``,
+    (c) ``shard_map`` collectives can bind its axis names.
+  * ``make_mesh(shape, names)`` builds a mesh on every supported version.
+  * ``axis_sizes_dict(mesh)`` maps axis name -> size for concrete *and*
+    abstract meshes.
+  * ``shard_map(...)`` resolves to the native implementation.
+
+Resolution order for ``current_mesh()``:
+
+  1. ``jax.sharding.get_abstract_mesh()`` (new-style sharding-in-types);
+  2. ``jax._src.mesh.get_abstract_mesh()`` (0.4.x internal spelling);
+  3. ``jax._src.mesh.thread_resources.env.physical_mesh`` (the classic
+     ``with mesh:`` resource env — what ``use_mesh`` sets on 0.4.x);
+  4. the thread-local registry maintained by ``use_mesh`` itself, which
+     works even on a hypothetical JAX with none of the above.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Iterator, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = [
+    "current_mesh",
+    "use_mesh",
+    "make_mesh",
+    "axis_sizes_dict",
+    "shard_map",
+    "cost_analysis_dict",
+]
+
+# ---------------------------------------------------------------- resolution
+
+_LOCAL = threading.local()  # .stack: list of meshes activated by use_mesh
+
+
+def _registry_stack() -> list:
+    stack = getattr(_LOCAL, "stack", None)
+    if stack is None:
+        stack = _LOCAL.stack = []
+    return stack
+
+
+def _nonempty(mesh) -> Optional[Mesh]:
+    """Normalize: an empty / axis-less mesh counts as 'no mesh'."""
+    if mesh is None:
+        return None
+    if getattr(mesh, "empty", False):
+        return None
+    if not getattr(mesh, "axis_names", ()):
+        return None
+    return mesh
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The active (concrete or abstract) mesh, or None outside any context."""
+    getter = getattr(jax.sharding, "get_abstract_mesh", None)
+    if getter is not None:
+        mesh = _nonempty(getter())
+        if mesh is not None:
+            return mesh
+    try:  # 0.4.x internal spelling of the same thing
+        from jax._src import mesh as _mesh_src
+
+        getter = getattr(_mesh_src, "get_abstract_mesh", None)
+        if getter is not None:
+            mesh = _nonempty(getter())
+            if mesh is not None:
+                return mesh
+        tr = getattr(_mesh_src, "thread_resources", None)
+        if tr is not None:
+            mesh = _nonempty(tr.env.physical_mesh)
+            if mesh is not None:
+                return mesh
+    except Exception:  # pragma: no cover - exotic JAX builds
+        pass
+    stack = _registry_stack()
+    return _nonempty(stack[-1]) if stack else None
+
+
+# ---------------------------------------------------------------- activation
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh) -> Iterator[Mesh]:
+    """Activate `mesh` for the calling thread (portable jax.set_mesh).
+
+    Prefers the newest native activation available so jit/GSPMD resolve
+    bare PartitionSpecs, then falls back to the classic ``with mesh:``
+    resource env, and always mirrors into the thread-local registry so
+    ``current_mesh()`` works regardless of JAX version.
+    """
+    stack = _registry_stack()
+    stack.append(mesh)
+    try:
+        setter = getattr(jax, "set_mesh", None) or getattr(
+            jax.sharding, "use_mesh", None
+        )
+        if setter is not None:
+            with setter(mesh):
+                yield mesh
+        elif isinstance(mesh, Mesh):
+            with mesh:  # classic resource-env context (<= 0.4.x)
+                yield mesh
+        else:  # abstract mesh on a JAX without a native setter
+            yield mesh
+    finally:
+        stack.pop()
+
+
+# -------------------------------------------------------------- construction
+
+
+def make_mesh(
+    axis_shapes: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    explicit: bool = False,
+) -> Mesh:
+    """``jax.make_mesh`` across versions (``axis_types`` appeared later).
+
+    `explicit=True` asks for sharding-in-types Explicit axes where the
+    running JAX supports them; otherwise Auto/classic semantics apply.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    factory = getattr(jax, "make_mesh", None)
+    if factory is not None and axis_type is not None:
+        kind = axis_type.Explicit if explicit else axis_type.Auto
+        try:
+            return factory(
+                tuple(axis_shapes), tuple(axis_names),
+                axis_types=(kind,) * len(tuple(axis_names)),
+            )
+        except TypeError:  # axis_types kwarg not in this signature
+            pass
+    if factory is not None:
+        return factory(tuple(axis_shapes), tuple(axis_names))
+    devices = np.array(jax.devices()[: int(np.prod(axis_shapes))]).reshape(
+        tuple(axis_shapes)
+    )
+    return Mesh(devices, tuple(axis_names))
+
+
+# ------------------------------------------------------------------- queries
+
+
+def axis_sizes_dict(mesh) -> dict:
+    """{axis name: size} for concrete Mesh and AbstractMesh alike."""
+    sizes = getattr(mesh, "axis_sizes", None)
+    if sizes is not None and not callable(sizes):
+        return dict(zip(mesh.axis_names, sizes))
+    shape = getattr(mesh, "shape", None)
+    if shape is not None:
+        return dict(shape)
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """`Compiled.cost_analysis()` normalized across JAX versions.
+
+    0.4.x returns a one-dict-per-program list; newer releases return the
+    dict directly (and may return None when analysis is unavailable).
+    """
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return cost or {}
+
+
+# ------------------------------------------------------------------ shard_map
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # <= 0.4.x: experimental namespace, same semantics
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f=None, /, *, mesh, in_specs, out_specs, **kw):
+        if f is None:
+            return lambda g: _sm(g, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

@@ -3,6 +3,9 @@
 Params and activations are annotated with *logical* axes; `spec_for` resolves
 them against whatever mesh is active (single-pod ("data","model") or
 multi-pod ("pod","data","model")), so the same model code lowers on both.
+The active mesh is discovered through `repro.common.meshctx` — the
+JAX-version-portability layer — so these helpers behave identically across
+JAX releases with different mesh-context APIs.
 
 Rules (DESIGN.md §6):
   batch    -> ("pod", "data")   data parallel
@@ -21,6 +24,8 @@ from typing import Optional, Sequence, Tuple
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import meshctx
 
 __all__ = [
     "RULES",
@@ -172,11 +177,15 @@ def named_sharding(
 
 
 def logical_constraint(x: jax.Array, *axes: Optional[str]) -> jax.Array:
-    """`with_sharding_constraint` by logical axes; no-op outside a mesh ctx."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or not mesh.axis_names:
+    """`with_sharding_constraint` by logical axes; no-op outside a mesh ctx.
+
+    Mesh discovery goes through `repro.common.meshctx.current_mesh` (the
+    version-portability layer) — activate a mesh with `meshctx.use_mesh`.
+    """
+    mesh = meshctx.current_mesh()
+    if mesh is None:
         return x
-    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    sizes = meshctx.axis_sizes_dict(mesh)
     return jax.lax.with_sharding_constraint(
         x,
         spec_for(

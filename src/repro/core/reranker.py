@@ -19,7 +19,15 @@ import numpy as np
 from repro import optim
 from repro.core.features import N_FEATURES
 
-__all__ = ["RerankerConfig", "init_mlp", "mlp_forward", "train_reranker", "mlp_param_count"]
+__all__ = [
+    "RerankerConfig",
+    "init_mlp",
+    "mlp_forward",
+    "train_reranker",
+    "mlp_param_count",
+    "rerank_topk",
+    "rerank_topk_scored",
+]
 
 LAYERS = (N_FEATURES, 64, 32, 1)  # paper §4.2: [7, 64, 32, 1] => 2,625 params
 
@@ -114,16 +122,32 @@ def train_reranker(
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
-def rerank_topk(
+def rerank_topk_scored(
     params: dict,
     features: jnp.ndarray,  # [Q, C, 7] similarity-ordered candidates
     cand_idx: jnp.ndarray,  # [Q, C]
     k: int,
     valid: jnp.ndarray | None = None,  # [Q, C] — False for padded slots
-) -> jnp.ndarray:
-    """Re-score candidates with f_phi and return the re-ranked top-K ids."""
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Re-score candidates with f_phi; return (top-K ids, their f_phi scores).
+
+    The returned scores are the MLP logits that *produced* the ordering, so
+    serving code can report the ranking signal actually used (not the
+    pre-rerank similarities, which may order differently).
+    """
     scores = mlp_forward(params, features)  # [Q, C]
     if valid is not None:
         scores = jnp.where(valid, scores, -1e30)
-    _, order = jax.lax.top_k(scores, k)
-    return jnp.take_along_axis(cand_idx, order, axis=1)
+    top_scores, order = jax.lax.top_k(scores, k)
+    return jnp.take_along_axis(cand_idx, order, axis=1), top_scores
+
+
+def rerank_topk(
+    params: dict,
+    features: jnp.ndarray,
+    cand_idx: jnp.ndarray,
+    k: int,
+    valid: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Ids-only wrapper around `rerank_topk_scored`."""
+    return rerank_topk_scored(params, features, cand_idx, k, valid)[0]

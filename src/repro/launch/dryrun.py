@@ -25,6 +25,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.common.meshctx import cost_analysis_dict, use_mesh
 from repro.common.sharding import set_policy
 from repro.configs import ARCHITECTURES, get_config
 from repro.launch.hlo_analysis import parse_collectives, roofline_terms
@@ -81,9 +82,9 @@ def _probe_depths(cfg) -> tuple:
 def _measure(cfg, shape, mesh, tc, quantize=False):
     """Compile and return (flops, bytes, wire_bytes) per device for cfg."""
     fn, args = build_program(cfg, shape, mesh, tc, quantize)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         compiled = jax.jit(fn).lower(*args).compile()
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     colls = parse_collectives(compiled.as_text())
     return (
         float(cost.get("flops", 0.0)),
@@ -131,13 +132,13 @@ def run_one(
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     t0 = time.time()
     fn, args = build_program(cfg, shape, mesh, tc, quantize)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         lowered = jax.jit(fn).lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
     t_total = time.time() - t0
 
-    cost = compiled.cost_analysis() or {}
+    cost = cost_analysis_dict(compiled)
     ma = compiled.memory_analysis()
     mem = {
         "argument_bytes": getattr(ma, "argument_size_in_bytes", None),

@@ -4,10 +4,16 @@ Defined as functions (never module-level constants) so importing this module
 never touches jax device state — `dryrun.py` must set
 XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* the first jax
 device query, and smoke tests must keep seeing 1 device.
+
+Mesh construction and activation go through `repro.common.meshctx`, which
+papers over the JAX-version drift in `jax.make_mesh(axis_types=...)` /
+`jax.set_mesh` (see that module's portability contract).
 """
 from __future__ import annotations
 
 import jax
+
+from repro.common import meshctx
 
 __all__ = ["make_production_mesh", "make_local_mesh", "CHIPS_PER_POD"]
 
@@ -18,11 +24,10 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    kinds = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=kinds)
+    return meshctx.make_mesh(shape, axes)
 
 
 def make_local_mesh() -> jax.sharding.Mesh:
     """Whatever devices exist locally, as a 1D (data,) mesh — CPU tests."""
     n = len(jax.devices())
-    return jax.make_mesh((n,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    return meshctx.make_mesh((n,), ("data",))

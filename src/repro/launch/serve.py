@@ -38,7 +38,12 @@ def build_router(bench, stage: str = "oats-s1", k: int = 5):
     # offline control plane: fit the requested OATS stage, then swap the table
     pipe = OATSPipeline.fit(bench, PipelineConfig(stages=STAGE_PRESETS[stage], k=k), enc)
     db.swap_table(pipe.tool_table)
-    router = SemanticRouter(db, embed_fn=lambda toks: enc.encode_one(toks), k=k)
+    router = SemanticRouter(
+        db,
+        embed_fn=lambda toks: enc.encode_one(toks),
+        embed_batch_fn=enc.encode,  # one encoder call per route_batch
+        k=k,
+    )
     return router, pipe
 
 
@@ -48,6 +53,8 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--stage", default="oats-s1", choices=sorted(STAGE_PRESETS))
     ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--route-batch", type=int, default=16,
+                    help="queries per batched route_batch call")
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--n-tools", type=int, default=199)
     ap.add_argument("--n-queries", type=int, default=800)
@@ -69,9 +76,15 @@ def main(argv=None):
     hits, lat = 0, []
     t_start = time.time()
     rng = np.random.default_rng(args.seed)
-    for qi in test:
-        # 1) router: select tools on CPU (the paper's single-digit-ms path)
-        res = router.route(bench.query_tokens[qi])
+    # 1) router: select tools on CPU (the paper's single-digit-ms path),
+    #    batched — each route_batch call scores a whole block of queries in
+    #    one jitted top-K pass
+    bs = max(args.route_batch, 1)
+    results = []
+    for lo in range(0, len(test), bs):
+        chunk = test[lo : lo + bs]
+        results.extend(router.route_batch([bench.query_tokens[q] for q in chunk]))
+    for qi, res in zip(test, results):
         lat.append(res.latency_ms)
         hits += int(bench.relevant[qi][0] in res.tools)
         # 2) backend: prefill the (stub-tokenized) request + decode new tokens

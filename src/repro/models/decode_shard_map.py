@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.common import meshctx
 from repro.models.config import ModelConfig
 
 __all__ = ["attn_decode_seq_sharded"]
@@ -46,10 +47,10 @@ def attn_decode_seq_sharded(
     cache_v: jnp.ndarray,
     pos: jnp.ndarray,  # scalar absolute position
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = meshctx.current_mesh()
     w_global = cache_k.shape[1]
     hd = q.shape[-1]
-    m = dict(zip(mesh.axis_names, mesh.axis_sizes)).get("model", 1)
+    m = meshctx.axis_sizes_dict(mesh).get("model", 1)
     baxes = _batch_axes(mesh)
     bspec = baxes if baxes else None
 
@@ -90,7 +91,7 @@ def attn_decode_seq_sharded(
         out = (num / jnp.maximum(den, 1e-30).astype(num.dtype)).reshape(b, 1, h, hd)
         return out, ck, cv
 
-    return jax.shard_map(
+    return meshctx.shard_map(
         local,
         mesh=mesh,
         in_specs=(

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common import meshctx
 from repro.common.sharding import logical_constraint as shard
 from repro.models.config import ModelConfig
 
@@ -155,8 +156,8 @@ def attn_decode(
     positions = jnp.broadcast_to(jnp.asarray(pos).reshape(-1, 1), (b, 1))
     q, k, v = _qkv(p, x, cfg, positions)
     if cfg.decode_attn == "seq_shard":
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is not None and not mesh.empty and "model" in mesh.axis_names:
+        mesh = meshctx.current_mesh()
+        if mesh is not None and "model" in mesh.axis_names:
             from repro.models.decode_shard_map import attn_decode_seq_sharded
 
             out, cache_k, cache_v = attn_decode_seq_sharded(
@@ -232,6 +233,12 @@ def moe_block(
     h = shard(h, "experts", None, "ff")
     out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(e * cap, d)
     out_buf = jnp.concatenate([out_buf, jnp.zeros((1, d), x.dtype)], axis=0)
+    # The token gather-back uses GLOBAL row ids into the expert-sharded
+    # buffer; the 0.4.x SPMD partitioner lowers that gather against the
+    # *local* shard without a collective (silently wrong rows). Pin the
+    # buffer replicated first — the all-gather this inserts is the same
+    # collective a correct partition of the gather would have to emit.
+    out_buf = shard(out_buf, None, None)
 
     gathered = out_buf[target]  # [T*k, D]
     w = (top_w.reshape(-1) * keep).astype(x.dtype)

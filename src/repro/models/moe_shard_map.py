@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.common import meshctx
 from repro.models.config import ModelConfig
 
 __all__ = ["moe_block_shard_map"]
@@ -37,20 +38,22 @@ def _batch_axes(mesh) -> tuple:
 def moe_block_shard_map(
     p: dict, x: jnp.ndarray, cfg: ModelConfig
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Drop-in replacement for layers.moe_block under an active mesh."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+    """Drop-in replacement for layers.moe_block under an active mesh
+    (discovered portably via `repro.common.meshctx.current_mesh`)."""
+    mesh = meshctx.current_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
         from repro.models.layers import moe_block  # no TP axis: GSPMD path
 
         return moe_block(p, x, cfg)
 
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.experts_per_token
-    m = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+    sizes = meshctx.axis_sizes_dict(mesh)
+    m = sizes["model"]
     assert e % m == 0, f"experts {e} must divide model axis {m}"
     e_local = e // m
     baxes = _batch_axes(mesh)
-    dp = int(np.prod([dict(zip(mesh.axis_names, mesh.axis_sizes))[a] for a in baxes])) or 1
+    dp = int(np.prod([sizes[a] for a in baxes])) or 1
     t_local = (b // dp) * s
     cap = max(int(np.ceil(t_local * k / e * cfg.capacity_factor)), 1)
 
@@ -104,7 +107,7 @@ def moe_block_shard_map(
         y = jax.lax.psum(y, "model")
         return y.reshape(bl, s, d)
 
-    y = jax.shard_map(
+    y = meshctx.shard_map(
         local,
         mesh=mesh,
         in_specs=(

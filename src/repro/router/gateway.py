@@ -6,8 +6,19 @@ top-K tools, and dispatch to a backend model pool. All learning lives in the
 offline control plane (`repro.core`); this module never touches a gradient.
 
 The router is deliberately stateless across requests (production routers are
-horizontally-scaled proxies); the only mutable state is the swappable
-embedding table inside ToolsDatabase and the outcome log sink.
+horizontally-scaled proxies); the mutable state is the swappable embedding
+table inside ToolsDatabase, a version-keyed device-side cache of that table
+(pure derived state, rebuilt from any snapshot), and the outcome log sink.
+
+Serving is batch-first: `route_batch` embeds, scores, and top-Ks Q queries
+in ONE jitted `topk_dense` call (plus one batched `rerank_topk_scored` call
+when the Stage-2 MLP is enabled), amortizing dispatch overhead across the
+whole batch — the hot-path design the paper's single-digit-millisecond
+budget assumes at production traffic. `route` is the batch-of-1 special
+case and delegates, so batched and sequential serving are equivalent by
+construction. `RouteResult.scores` always holds the scores that produced
+the final ranking: cosine similarities on the dense path, f_phi MLP scores
+when the re-ranker reordered the candidates.
 """
 from __future__ import annotations
 
@@ -20,6 +31,7 @@ import numpy as np
 
 from repro.core import reranker as reranker_lib
 from repro.core.features import OutcomeFeaturizer
+from repro.core.retrieval import NEG_INF, topk_dense
 from repro.router.tooldb import ToolsDatabase
 
 __all__ = ["RouteResult", "OutcomeEvent", "SemanticRouter"]
@@ -28,8 +40,8 @@ __all__ = ["RouteResult", "OutcomeEvent", "SemanticRouter"]
 @dataclasses.dataclass
 class RouteResult:
     tools: List[int]  # selected tool ids (top-K)
-    scores: List[float]
-    latency_ms: float
+    scores: List[float]  # the scores the final ranking was computed from
+    latency_ms: float  # per-query share of the (possibly batched) route call
     pool: str  # backend pool the request was dispatched to
     table_version: int
 
@@ -54,6 +66,7 @@ class SemanticRouter:
         featurizer: Optional[OutcomeFeaturizer] = None,
         candidate_multiplier: int = 5,
         pool_selector: Optional[Callable[[np.ndarray, List[int]], str]] = None,
+        embed_batch_fn: Optional[Callable[[Sequence[np.ndarray]], np.ndarray]] = None,
     ):
         self.db = db
         self.embed_fn = embed_fn
@@ -62,38 +75,108 @@ class SemanticRouter:
         self.featurizer = featurizer
         self.candidate_multiplier = candidate_multiplier
         self.pool_selector = pool_selector or (lambda q, tools: "default")
+        # batched encoder (one call for Q queries); falls back to looping
+        # embed_fn so any single-query encoder still works batch-first
+        self.embed_batch_fn = embed_batch_fn
         self.outcome_log: List[OutcomeEvent] = []
+        self._device_table = (-1, None)  # (table_version, jnp table)
 
     # ---------------------------------------------------------- serving path
-    def route(self, query_tokens: np.ndarray) -> RouteResult:
+    def _embed_batch(self, queries: Sequence[np.ndarray]) -> np.ndarray:
+        if self.embed_batch_fn is not None:
+            return np.asarray(self.embed_batch_fn(queries), dtype=np.float32)
+        return np.stack([np.asarray(self.embed_fn(q), np.float32) for q in queries])
+
+    def route_batch(
+        self,
+        queries: Sequence[np.ndarray],
+        candidate_masks: Optional[np.ndarray] = None,  # [Q, T] {0,1} or None
+    ) -> List[RouteResult]:
+        """Route Q queries in one batched scoring pass.
+
+        One `topk_dense` jit call scores the whole [Q, D] query block against
+        the [T, D] table (with optional per-query candidate masks); when the
+        Stage-2 MLP is configured, featurization and `rerank_topk_scored`
+        also run over the full batch. Returns one RouteResult per query, in
+        input order; each carries the per-query amortized latency. A
+        candidate mask admitting fewer than k tools yields a correspondingly
+        shorter tools/scores list (never masked-out ids).
+        """
         t0 = time.perf_counter()
-        q = self.embed_fn(query_tokens)  # [384]
-        table = self.db.embeddings
-        sims = table @ q  # [T]
-        if self.mlp_params is not None and self.featurizer is not None:
-            c = min(self.k * self.candidate_multiplier, len(self.db))
-            order = np.argpartition(-sims, c - 1)[:c]
-            order = order[np.argsort(-sims[order], kind="stable")]
-            feats = self.featurizer.features(
-                q[None], [query_tokens], order[None], sims[order][None]
+        n_q = len(queries)
+        if n_q == 0:
+            return []
+        q = self._embed_batch(queries)  # [Q, D]
+        # atomic (version, table) snapshot — scoring and the reported
+        # table_version must come from the SAME table even if swap_table
+        # lands mid-batch; the device copy is refreshed only on version
+        # change, not per call (this is the hot path)
+        table_version, host_table = self.db.snapshot()
+        cached_version, table = self._device_table
+        if cached_version != table_version:
+            table = jnp.asarray(host_table)
+            self._device_table = (table_version, table)
+        n_t = table.shape[0]
+        rerank = self.mlp_params is not None and self.featurizer is not None
+        c = min(self.k * self.candidate_multiplier, n_t) if rerank else min(self.k, n_t)
+        k_eff = min(self.k, c)  # tables smaller than k yield short results
+        # pad the batch up to a power-of-two bucket so the jitted scoring
+        # programs compile once per bucket, not once per distinct Q (the
+        # scheduler's admission batches vary with free slots; a retrace is
+        # a multi-ms stall against the 10 ms budget). Pad rows are zero
+        # queries whose results are sliced away below.
+        n_pad = (1 << max(n_q - 1, 0).bit_length()) - n_q
+        if n_pad:
+            q_in = np.concatenate([q, np.zeros((n_pad, q.shape[1]), np.float32)])
+            queries_in = list(queries) + [np.zeros(0, np.int64)] * n_pad
+            masks_in = None if candidate_masks is None else np.concatenate(
+                [candidate_masks, np.ones((n_pad, n_t), candidate_masks.dtype)]
             )
-            top = np.asarray(
-                reranker_lib.rerank_topk(
-                    self.mlp_params, jnp.asarray(feats), jnp.asarray(order[None]), self.k
-                )
-            )[0]
         else:
-            top = np.argpartition(-sims, min(self.k, len(sims) - 1))[: self.k]
-            top = top[np.argsort(-sims[top], kind="stable")]
-        latency_ms = (time.perf_counter() - t0) * 1e3
-        pool = self.pool_selector(q, [int(t) for t in top])
-        return RouteResult(
-            tools=[int(t) for t in top],
-            scores=[float(sims[t]) for t in top],
-            latency_ms=latency_ms,
-            pool=pool,
-            table_version=self.db.table_version,
-        )
+            q_in, queries_in, masks_in = q, queries, candidate_masks
+        mask_j = None if masks_in is None else jnp.asarray(masks_in)
+        cand_scores, cand_idx = topk_dense(jnp.asarray(q_in), table, c, mask_j)
+        if rerank:
+            cand_idx_np = np.asarray(cand_idx)
+            cand_scores_np = np.asarray(cand_scores)
+            feats = self.featurizer.features(q_in, queries_in, cand_idx_np, cand_scores_np)
+            top_idx, top_scores = reranker_lib.rerank_topk_scored(
+                self.mlp_params,
+                jnp.asarray(feats),
+                cand_idx,
+                k_eff,
+                valid=jnp.asarray(cand_scores_np > NEG_INF / 2),
+            )
+        else:
+            top_idx, top_scores = cand_idx[:, :k_eff], cand_scores[:, :k_eff]
+        top_idx = np.asarray(top_idx)[:n_q]
+        top_scores = np.asarray(top_scores)[:n_q]
+        latency_ms = (time.perf_counter() - t0) * 1e3 / n_q
+        out = []
+        for j in range(n_q):
+            # a mask can leave fewer than k candidates; those slots carry the
+            # NEG_INF sentinel and must not surface as selected tools
+            valid_j = top_scores[j] > NEG_INF / 2
+            tools = [int(t) for t in top_idx[j][valid_j]]
+            out.append(
+                RouteResult(
+                    tools=tools,
+                    scores=[float(s) for s in top_scores[j][valid_j]],
+                    latency_ms=latency_ms,
+                    pool=self.pool_selector(q[j], tools),
+                    table_version=table_version,
+                )
+            )
+        return out
+
+    def route(
+        self,
+        query_tokens: np.ndarray,
+        candidate_mask: Optional[np.ndarray] = None,  # [T] {0,1} or None
+    ) -> RouteResult:
+        """Single-query routing: the batch-of-1 case of `route_batch`."""
+        masks = None if candidate_mask is None else np.asarray(candidate_mask)[None]
+        return self.route_batch([query_tokens], masks)[0]
 
     # ------------------------------------------------------------ feedback
     def record_outcome(self, query_tokens: np.ndarray, tool_id: int, outcome: int):

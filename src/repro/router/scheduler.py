@@ -4,7 +4,11 @@ The paper's gateway (Fig. 1b) forwards requests to model pools; this module
 is the pool-side scheduler a production deployment needs: a fixed number of
 decode *slots*, requests admitted from a queue as slots free up, one batched
 decode step per tick (all active slots advance together), prefill on
-admission. Orchestrated in Python, compute in two jitted programs
+admission. When constructed with a `SemanticRouter`, the admission loop
+tool-routes incoming requests through the batched serving API
+(`route_batch`): all requests admitted in a tick are embedded/scored/top-K'd
+in one jitted call instead of one route per request.
+Orchestrated in Python, compute in two jitted programs
 (prefill / decode_step) over a fixed-capacity batch — the standard
 continuous-batching design (Orca/vLLM) mapped to JAX's static shapes: the
 decode batch is always [n_slots, 1]; empty slots carry a pad token and their
@@ -13,6 +17,7 @@ outputs are ignored.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
@@ -32,6 +37,8 @@ class Request:
     prompt: np.ndarray  # [S] (or [S, K] for codebook archs)
     max_new_tokens: int
     tools: Optional[List[int]] = None  # attached by the semantic router
+    query_tokens: Optional[np.ndarray] = None  # routed at admission when set
+    route_result: Optional[object] = None  # RouteResult from batched routing
     # filled by the scheduler
     generated: List[int] = dataclasses.field(default_factory=list)
     admitted_at_tick: int = -1
@@ -52,12 +59,14 @@ class ContinuousBatcher:
         n_slots: int = 4,
         max_len: int = 256,
         sample: Optional[Callable[[jnp.ndarray], jnp.ndarray]] = None,
+        router=None,  # Optional[SemanticRouter]: batch-routes at admission
     ):
         self.cfg = cfg
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.sample = sample or (lambda logits: jnp.argmax(logits, axis=-1))
+        self.router = router
         self.queue: Deque[Request] = deque()
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, dtype=np.int32)  # next position
@@ -88,7 +97,27 @@ class ContinuousBatcher:
     def submit(self, req: Request):
         self.queue.append(req)
 
+    def _route_admissible(self):
+        """Tool-route the queue head in ONE `route_batch` call.
+
+        Only the requests that can actually be admitted this tick (up to the
+        number of free slots) are routed, so routing work tracks admission
+        rate rather than queue depth.
+        """
+        if self.router is None:
+            return
+        free = sum(1 for s in self.slots if s is None)
+        head = itertools.islice(self.queue, free)
+        pending = [r for r in head if r.tools is None and r.query_tokens is not None]
+        if not pending:
+            return
+        results = self.router.route_batch([r.query_tokens for r in pending])
+        for req, res in zip(pending, results):
+            req.tools = res.tools
+            req.route_result = res
+
     def _admit(self):
+        self._route_admissible()
         for slot in range(self.n_slots):
             if self.slots[slot] is not None or not self.queue:
                 continue

@@ -43,6 +43,13 @@ class ToolsDatabase:
     def embeddings(self) -> np.ndarray:
         return self._table
 
+    def snapshot(self) -> tuple:
+        """(table_version, embedding table) read atomically w.r.t. swaps,
+        so a serving batch can never score with table N+1 while labelling
+        its outcomes with version N."""
+        with self._lock:
+            return self.table_version, self._table
+
     def record(self, tool_id: int) -> ToolRecord:
         return self._records[tool_id]
 

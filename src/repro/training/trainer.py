@@ -4,9 +4,16 @@ Used by examples/train_100m.py (the end-to-end driver) and by the per-arch
 smoke tests. Runs on whatever mesh is active; on this CPU container that is
 the 1-device local mesh, on a pod it is the production mesh with the same
 code path (pjit via shardings on params/batch).
+
+Mesh activation is version-portable: pass `mesh=` and the trainer wraps
+init/step/restore in `repro.common.meshctx.use_mesh`, so the logical
+sharding constraints in the model resolve identically across JAX releases
+(see meshctx's portability contract). With `mesh=None` (the default) the
+trainer runs in whatever ambient context the caller established.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Callable, Dict, Iterator, List, Optional
@@ -16,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.msgpack_ckpt import restore_checkpoint, save_checkpoint
+from repro.common import meshctx
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.training.train_step import TrainConfig, make_train_step
@@ -34,24 +42,38 @@ class TrainerConfig:
 
 
 class Trainer:
-    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainerConfig,
+        mesh: Optional[jax.sharding.Mesh] = None,
+    ):
         self.cfg = cfg
         self.tcfg = tcfg
+        self.mesh = mesh
         self.step_fn, self.optimizer = make_train_step(cfg, tcfg.train)
         self.step_fn = jax.jit(self.step_fn)
-        self.params = M.init(cfg, jax.random.PRNGKey(tcfg.seed))
-        self.opt_state = self.optimizer.init(self.params)
+        with self._mesh_ctx():
+            self.params = M.init(cfg, jax.random.PRNGKey(tcfg.seed))
+            self.opt_state = self.optimizer.init(self.params)
         self.step = 0
         self.history: List[Dict[str, float]] = []
+
+    def _mesh_ctx(self):
+        """Portable activation of the configured mesh (no-op when None)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return meshctx.use_mesh(self.mesh)
 
     def restore(self, directory: Optional[str] = None):
         d = directory or self.tcfg.ckpt_dir
         step, tree, _ = restore_checkpoint(d)
-        self.params = jax.tree.map(jnp.asarray, tree["params"])
-        self.opt_state = jax.tree.unflatten(
-            jax.tree.structure(self.opt_state),
-            [jnp.asarray(x) for x in jax.tree.leaves(tree["opt_state"])],
-        )
+        with self._mesh_ctx():
+            self.params = jax.tree.map(jnp.asarray, tree["params"])
+            self.opt_state = jax.tree.unflatten(
+                jax.tree.structure(self.opt_state),
+                [jnp.asarray(x) for x in jax.tree.leaves(tree["opt_state"])],
+            )
         self.step = step
 
     def save(self):
@@ -66,9 +88,10 @@ class Trainer:
         t0 = time.time()
         for _ in range(self.tcfg.steps):
             batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
-            self.params, self.opt_state, metrics = self.step_fn(
-                self.params, self.opt_state, batch
-            )
+            with self._mesh_ctx():
+                self.params, self.opt_state, metrics = self.step_fn(
+                    self.params, self.opt_state, batch
+                )
             self.step += 1
             if self.step % self.tcfg.log_every == 0 or self.step == 1:
                 m = {k: float(v) for k, v in metrics.items()}

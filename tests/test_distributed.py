@@ -28,12 +28,12 @@ def _run(code: str) -> str:
 
 PRELUDE = """
 import dataclasses, jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.common.meshctx import make_mesh, use_mesh
 from repro.common.sharding import set_policy
 from repro.configs import get_config
 from repro.models.config import reduced
 from repro.models import model as M
-mesh = jax.make_mesh((2, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+mesh = make_mesh((2, 2), ("data", "model"))
 """
 
 
@@ -45,17 +45,19 @@ cfg2 = dataclasses.replace(cfg, moe_impl="shard_map")
 params = M.init(cfg, jax.random.PRNGKey(0))
 rng = np.random.default_rng(0)
 batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 32)), jnp.int32)}
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     l1, _ = jax.jit(lambda p, b: M.forward(cfg, p, b))(params, batch)
     l2, _ = jax.jit(lambda p, b: M.forward(cfg2, p, b))(params, batch)
 err = float(jnp.max(jnp.abs(l1 - l2)))
 assert err < 1e-4, err
 # gradients agree too
 g1 = jax.jit(jax.grad(lambda p: M.loss_fn(cfg, p, batch)[0]))(params)
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     g2 = jax.jit(jax.grad(lambda p: M.loss_fn(cfg2, p, batch)[0]))(params)
-gerr = max(float(jnp.max(jnp.abs(a - b))) for a, b in
-           zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
+# relative per-leaf: partitioned reductions reorder float accumulation,
+# so large-magnitude leaves (embed scatter-add) carry proportional noise
+gerr = max(float(jnp.max(jnp.abs(a - b)) / (1.0 + jnp.max(jnp.abs(a))))
+           for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)))
 assert gerr < 1e-2, gerr
 print("moe parity ok", err, gerr)
 """)
@@ -75,7 +77,7 @@ for arch in ("musicgen-medium", "stablelm-3b", "qwen2.5-3b", "hymba-1.5b"):
     _, cache = M.prefill(cfg, params, {"tokens": toks[:, :S-1]}, max_cache_len=S)
     dec = {"token": toks[:, S-1:S], "pos": jnp.asarray(S-1, jnp.int32)}
     l1, c1 = M.decode_step(cfg, params, cache, dec)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         set_policy("tp_kvs")
         l2, c2 = jax.jit(lambda p, c, b: M.decode_step(cfg2, p, c, b))(params, cache, dec)
         set_policy("tp")
@@ -89,6 +91,7 @@ for arch in ("musicgen-medium", "stablelm-3b", "qwen2.5-3b", "hymba-1.5b"):
 @pytest.mark.slow
 def test_policies_all_lower_train_step():
     _run(PRELUDE + """
+from repro.common.meshctx import cost_analysis_dict
 from repro.launch.specs import ShapeCase, input_specs
 from repro.launch.state_specs import opt_state_structs
 from repro.models.params import param_structs
@@ -102,9 +105,9 @@ for policy in ("tp", "tp_sp", "fsdp"):
     batch = input_specs(cfg, shape, mesh)
     step_fn, _ = make_train_step(cfg, TrainConfig(optimizer="adamw"))
     os_ = opt_state_structs("adamw", specs, mesh)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         c = jax.jit(step_fn).lower(ps, os_, batch).compile()
-    assert c.cost_analysis()["flops"] > 0
+    assert cost_analysis_dict(c)["flops"] > 0
     print(policy, "lowers ok")
 set_policy("tp")
 """)
@@ -126,8 +129,8 @@ rel = np.zeros((64, 16), np.float32)
 rel[np.arange(64), rng.integers(0, 16, 64)] = 1.0
 rel = jnp.asarray(rel)
 ref = refine_embeddings(te, qe, rel)
-mesh1 = jax.make_mesh((4,), ("model",), axis_types=(AxisType.Auto,))
-with jax.set_mesh(mesh1):
+mesh1 = make_mesh((4,), ("model",))
+with use_mesh(mesh1):
     te_s = jax.device_put(te, NamedSharding(mesh1, P("model", None)))
     rel_s = jax.device_put(rel, NamedSharding(mesh1, P(None, "model")))
     out = refine_embeddings(te_s, qe, rel_s)

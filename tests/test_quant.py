@@ -46,8 +46,23 @@ def test_quantized_decode_logits_close():
     l_ref, _ = M.decode_step(cfg, params, cache, dec)
     qp = quantize_tree(params)
     l_q, _ = M.decode_step(cfg, dequantize_tree(qp, jnp.float32), cache, dec)
-    # logits shift a little, but top-1 token agrees (what serving needs)
-    assert (jnp.argmax(l_ref, -1) == jnp.argmax(l_q, -1)).all()
+    # logits shift a little, but top-1 agrees (what serving needs) — except
+    # where the reference top-1/top-2 gap sits inside the int8 noise band,
+    # where the order may legitimately flip (platform reduction order decides)
+    ref = l_ref.reshape(l_ref.shape[0], -1)
+    q = l_q.reshape(l_q.shape[0], -1)
+    agree = jnp.argmax(ref, -1) == jnp.argmax(q, -1)
+    top2_val, top2_idx = jax.lax.top_k(ref, 2)
+    gap = top2_val[:, 0] - top2_val[:, 1]
+    # noise at the two COMPETING positions only — a large error on some
+    # unrelated logit must not excuse a genuine top-1 flip — and the excuse
+    # only applies when the flip IS to the reference runner-up
+    noise = jnp.max(
+        jnp.abs(jnp.take_along_axis(ref - q, top2_idx, axis=-1)), axis=-1
+    )
+    flipped_to_runner_up = jnp.argmax(q, -1) == top2_idx[:, 1]
+    excused = flipped_to_runner_up & (gap <= 2 * noise)
+    assert bool(jnp.all(agree | excused)), (agree, gap, noise)
     rel = float(jnp.max(jnp.abs(l_ref - l_q)) / jnp.max(jnp.abs(l_ref)))
     assert rel < 0.1, rel
 

@@ -137,4 +137,5 @@ def test_single_device_lowering_smoke():
     batch = {"tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
     lowered = jax.jit(lambda p, b: M.loss_fn(cfg, p, b)[0]).lower(pstructs, batch)
     compiled = lowered.compile()
-    assert compiled.cost_analysis()["flops"] > 0
+    from repro.common.meshctx import cost_analysis_dict
+    assert cost_analysis_dict(compiled)["flops"] > 0
