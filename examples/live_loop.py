@@ -1,0 +1,124 @@
+"""The online control plane end-to-end (paper §7.2 as a running subsystem):
+
+    serve -> outcome sink -> OutcomeStore -> RefinementController trigger ->
+    refine_with_gate -> atomic swap -> TableGuard shadow monitoring ->
+    (injected bad table) -> automatic rollback
+
+  PYTHONPATH=src python examples/live_loop.py
+
+Unlike examples/refine_loop.py (which wires refine_with_gate to the router
+by hand, cron-style), everything here flows through `repro.control`: the
+router pushes every outcome straight into the store, the controller decides
+when to refine and swaps accepted tables while traffic keeps flowing, and
+the guard watches rolling NDCG@5 per table version on labelled traffic.
+
+Act 2 injects a corrupted table *bypassing the validation gate* (the
+failure shadow monitoring exists for) and shows the guard condemning and
+rolling it back automatically.
+"""
+import numpy as np
+
+from repro.control import (
+    ControllerConfig,
+    GuardConfig,
+    OutcomeStore,
+    RefinementController,
+    TableGuard,
+)
+from repro.data.benchmarks import make_metatool_like
+from repro.embedding.bag_encoder import BagEncoder
+from repro.router.gateway import SemanticRouter
+from repro.router.tooldb import ToolRecord, ToolsDatabase
+
+bench = make_metatool_like(n_tools=199, n_queries=2400)
+enc = BagEncoder(bench.vocab)
+db = ToolsDatabase(
+    [ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
+     for i in range(bench.n_tools)],
+    enc.encode(bench.desc_tokens),
+)
+store = OutcomeStore(n_tools=len(db), capacity=100_000)
+router = SemanticRouter(
+    db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+    outcome_sink=store.append,  # every outcome goes straight to the store
+)
+guard = TableGuard(db, GuardConfig(k=5, min_samples=64, tolerance=0.02))
+controller = RefinementController(
+    db, store, enc.encode, routers=[router],
+    config=ControllerConfig(min_events=1500, min_queries=50),
+    guard=guard,
+)
+
+
+def serve_window(idx, batch_size=64):
+    """Route a traffic window batch-first; log outcomes + guard labels."""
+    for lo in range(0, len(idx), batch_size):
+        chunk = idx[lo : lo + batch_size]
+        results = router.route_batch([bench.query_tokens[qi] for qi in chunk])
+        for qi, res in zip(chunk, results):
+            for t in res.tools:
+                router.record_outcome(
+                    bench.query_tokens[qi], t, int(t in bench.relevant[qi])
+                )
+            guard.observe(res.table_version, res.tools, bench.relevant[qi])
+
+
+def heldout_ndcg(n=300):
+    from repro.metrics.retrieval import ndcg_at_k
+
+    idx = bench.test_idx[:n]
+    results = router.route_batch([bench.query_tokens[qi] for qi in idx])
+    return float(np.mean([
+        ndcg_at_k(res.tools, bench.relevant[qi], 5) for qi, res in zip(idx, results)
+    ]))
+
+
+print(f"act 1 — streamed outcomes close the refinement loop "
+      f"({bench.n_tools} tools, {len(bench.train_idx)} train queries)")
+ndcg_static = heldout_ndcg()
+print(f"  window 0 (static table v0): heldout NDCG@5 = {ndcg_static:.3f}")
+windows = np.array_split(bench.train_idx, 4)
+for w, idx in enumerate(windows, 1):
+    serve_window(idx)
+    report = controller.step()
+    print(f"  window {w}: {report.n_events} events in store "
+          f"({report.n_queries} unique queries), "
+          f"{'SWAP' if report.swapped else 'no swap'} -> table v{report.table_version}"
+          f" | {report.reason}")
+    print(f"            heldout NDCG@5 = {heldout_ndcg():.3f}")
+
+v_good = db.table_version
+ndcg_good = heldout_ndcg()
+assert v_good > 0, "expected at least one accepted swap in act 1"
+assert ndcg_good > ndcg_static, (
+    f"accepted swaps did not improve heldout NDCG@5 "
+    f"({ndcg_static:.3f} -> {ndcg_good:.3f})"
+)
+# serve labelled traffic on the final good table so the guard has a frozen
+# baseline window for it before anything replaces it
+serve_window(bench.test_idx[:300])
+
+print("\nact 2 — a corrupted table bypasses the gate; the guard rolls it back")
+rng = np.random.default_rng(0)
+bad = db.embeddings.copy()
+rng.shuffle(bad, axis=0)  # tool vectors scrambled across tools
+db.swap_table(bad)
+print(f"  injected bad table: v{db.table_version} "
+      f"(heldout NDCG@5 = {heldout_ndcg():.3f})")
+for w, idx in enumerate(np.array_split(bench.test_idx, 3), 1):
+    serve_window(idx)
+    report = controller.step()
+    g = report.guard
+    print(f"  shadow window {w}: guard={g.action} "
+          f"(ndcg={g.ndcg if g.ndcg is None else round(g.ndcg, 3)}, "
+          f"baseline={g.baseline if g.baseline is None else round(g.baseline, 3)}, "
+          f"n={g.n_samples}) -> table v{db.table_version}")
+    if g.action == "rolled_back":
+        break
+
+assert guard.rollbacks, "guard failed to roll back the corrupted table"
+restored = heldout_ndcg()
+print(f"  restored table v{db.table_version}: heldout NDCG@5 = {restored:.3f} "
+      f"(good table was {ndcg_good:.3f})")
+assert abs(restored - ndcg_good) < 1e-6, "rollback did not restore the good table"
+print("\nloop closed: outcomes -> refine -> validate -> swap -> monitor -> rollback")

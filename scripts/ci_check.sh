@@ -1,11 +1,16 @@
 #!/usr/bin/env bash
-# Tier-1 CI gate: full test suite + the router serving-path smoke benchmark.
+# Tier-1 CI gate: full test suite + serving-path and control-plane smoke
+# benchmarks.
 #
 #   bash scripts/ci_check.sh [extra pytest args...]
 #
-# The smoke bench writes BENCH_router_smoke.json (scaled-down batches/iters);
-# the full recorded numbers live in BENCH_router.json via
+# The smoke benches write BENCH_*_smoke.json (scaled-down batches/iters);
+# the full recorded numbers live in BENCH_router.json / BENCH_control.json via
 #   PYTHONPATH=src python -m benchmarks.router_bench
+#   PYTHONPATH=src python -m benchmarks.control_bench
+# control_bench runs the whole outcome->refine->validate->swap loop (plus
+# route_batch under concurrent swaps), so any gate/guard/controller exception
+# — or a p99 past the 10 ms budget — fails CI here.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -14,3 +19,5 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 
 python -m benchmarks.router_bench --smoke --out BENCH_router_smoke.json
+
+python -m benchmarks.control_bench --smoke --out BENCH_control_smoke.json

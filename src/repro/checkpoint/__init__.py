@@ -1,0 +1,13 @@
+"""Checkpointing: msgpack + compressed pytrees (see msgpack_ckpt).
+
+Re-exported at package level so stateful subsystems (trainer, the control
+plane's OutcomeStore) can depend on `repro.checkpoint` without naming the
+backend module.
+"""
+from repro.checkpoint.msgpack_ckpt import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["latest_step", "restore_checkpoint", "save_checkpoint"]

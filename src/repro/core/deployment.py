@@ -12,7 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["DeploymentPlan", "recommend_stages", "data_density"]
+__all__ = ["DeploymentPlan", "recommend_stages", "data_density", "refine_trigger"]
 
 MLP_DENSITY_THRESHOLD = 10.0  # outcome examples per tool (§7.2)
 ADAPTER_MIN_TOOLS = 500  # §7.3
@@ -61,3 +61,23 @@ def recommend_stages(n_tools: int, n_outcome_examples: int) -> DeploymentPlan:
         refine=True, mlp_reranker=mlp, contrastive_adapter=adapter,
         density=density, reason=reason,
     )
+
+
+def refine_trigger(
+    n_new_events: int,
+    elapsed_s: float,
+    min_events: int,
+    max_interval_s: float,
+) -> bool:
+    """When should the online control plane wake the refinement job?
+
+    §7.2's cadence guidance as policy: run when a full batch of fresh
+    outcome evidence has accumulated (`min_events`), or when the table has
+    gone stale (`max_interval_s` since the last refinement) *and* there is
+    at least one new event — an idle router never churns its table, and a
+    trickle of events is folded into the staleness cycle rather than waking
+    the job per event.
+    """
+    if n_new_events >= min_events:
+        return True
+    return elapsed_s >= max_interval_s and n_new_events > 0

@@ -1,8 +1,17 @@
 """Outcome-log machinery (Alg. 1 steps 1-2).
 
-From production logs (here: retrieval against ground truth on the train split)
-we build, per tool, the positive query set Q+ and the hard-negative set Q-.
-Represented densely as [Q_train, T] masks so the whole of Alg. 1 jits.
+From production logs we build, per tool, the positive query set Q+ and the
+hard-negative set Q-. Represented densely as [Q_train, T] masks so the whole
+of Alg. 1 jits. Two sources feed this machinery:
+
+  * train-split ground truth (`collect_outcomes`): retrieval against a dense
+    relevance matrix — the offline benchmark shape;
+  * streamed serving outcomes (`masks_from_stream`): (query, tool, outcome)
+    event triples logged by the live router and drained through the control
+    plane's `OutcomeStore` — §7.2's "read outcome logs" step. The resulting
+    positive mask doubles as the observed relevance matrix that
+    `refine_embeddings` consumes (a logged success *is* the relevance label
+    in deployment; no ground-truth file exists at serving time).
 
 `positives` semantics (paper App. A.3 vs Alg.1 line 10): the walkthrough
 collects *all* ground-truth queries for the tool as Q+, while Alg. 1's
@@ -18,8 +27,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-__all__ = ["OutcomeLogs", "collect_outcomes"]
+__all__ = ["OutcomeLogs", "collect_outcomes", "masks_from_stream"]
 
 
 @jax.tree_util.register_dataclass
@@ -62,3 +72,38 @@ def collect_outcomes(
         pos_mask = relevance
     neg_mask = retrieved_mask * (1.0 - relevance)  # hard negatives only
     return OutcomeLogs(pos_mask=pos_mask, neg_mask=neg_mask, retrieved=topk)
+
+
+def masks_from_stream(
+    query_ids: np.ndarray,  # [E] int — index into the deduped query axis
+    tool_ids: np.ndarray,  # [E] int — routed tool per event
+    outcomes: np.ndarray,  # [E] {0, 1} — logged success/failure
+    n_queries: int,
+    n_tools: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Dense `[Q, T]` pos/neg masks from streamed (q_j, t_i, o_j) events.
+
+    Pure numpy — runs in the control plane, not inside jit. The same
+    (query, tool) pair may be logged repeatedly across serving windows with
+    mixed outcomes (outcomes are stochastic downstream signals); at least
+    one logged success marks the pair positive — the evidence the tool *can*
+    serve that intent — and positives veto negatives, so `pos * neg == 0`
+    always holds. `pos` is the observed relevance matrix for
+    `refine_embeddings`; `neg` is the observed-failure mask, kept for
+    diagnostics and density accounting (Alg. 1 re-derives hard negatives
+    against the *current* table each iteration, so the refinement itself
+    only needs `pos`).
+    """
+    query_ids = np.asarray(query_ids, dtype=np.int64)
+    tool_ids = np.asarray(tool_ids, dtype=np.int64)
+    outcomes = np.asarray(outcomes)
+    if query_ids.size:
+        assert query_ids.min() >= 0 and query_ids.max() < n_queries
+        assert tool_ids.min() >= 0 and tool_ids.max() < n_tools
+    pos = np.zeros((n_queries, n_tools), dtype=np.float32)
+    neg = np.zeros((n_queries, n_tools), dtype=np.float32)
+    good = outcomes > 0
+    pos[query_ids[good], tool_ids[good]] = 1.0
+    neg[query_ids[~good], tool_ids[~good]] = 1.0
+    neg *= 1.0 - pos
+    return pos, neg

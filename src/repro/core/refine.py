@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.outcomes import collect_outcomes
-from repro.metrics.retrieval import batched_recall_at_k
+from repro.metrics.retrieval import batched_ndcg_at_k, batched_recall_at_k
 
 __all__ = ["RefineConfig", "RefineResult", "refine_embeddings", "refine_with_gate"]
 
@@ -38,6 +38,17 @@ class RefineConfig:
     momentum: float = 0.5  # mu
     k: int = 5  # top-K used both for outcome logs and the validation gate
     positives: str = "ground_truth"  # see outcomes.py
+    # validation-gate metric: "recall" (Alg. 1 step 5, the offline default)
+    # or "ndcg". With streamed-outcome relevance every logged positive was
+    # in the serving top-K by construction, so held-out Recall@K starts at
+    # exactly 1.0 and the gate can only tie or reject; rank-sensitive NDCG
+    # still registers improvement (positives pulled toward rank 1) — the
+    # online control plane gates on it.
+    gate_metric: str = "recall"
+    # materialize the [N+1, T, D] per-iteration history (Fig. 4 convergence
+    # plots). The control plane's repeated refinements on large tables turn
+    # this off: the buffer is N+1 full table copies of pure overhead there.
+    keep_history: bool = True
 
 
 @jax.tree_util.register_dataclass
@@ -47,7 +58,9 @@ class RefineResult:
     accepted: jnp.ndarray  # bool — validation gate decision
     recall_before: jnp.ndarray
     recall_after: jnp.ndarray
-    history: jnp.ndarray  # [N+1, T, D] per-iteration tables (fig. 4 convergence)
+    # [N+1, T, D] per-iteration tables (fig. 4 convergence), or None when
+    # the run was configured with keep_history=False
+    history: Optional[jnp.ndarray]
 
 
 def _masked_centroid(mask: jnp.ndarray, query_emb: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -59,7 +72,10 @@ def _masked_centroid(mask: jnp.ndarray, query_emb: jnp.ndarray) -> tuple[jnp.nda
 
 
 @functools.partial(
-    jax.jit, static_argnames=("alpha", "beta", "iterations", "momentum", "k", "positives")
+    jax.jit,
+    static_argnames=(
+        "alpha", "beta", "iterations", "momentum", "k", "positives", "keep_history"
+    ),
 )
 def refine_embeddings(
     tool_emb: jnp.ndarray,  # [T, D] original table e(d_i)
@@ -73,9 +89,16 @@ def refine_embeddings(
     momentum: float = 0.5,
     k: int = 5,
     positives: str = "ground_truth",
+    keep_history: bool = True,
 ) -> jnp.ndarray:
-    """Run Alg. 1 steps 1-4. Returns [N+1, T, D]: table after each iteration
-    (index 0 = original), so callers can plot convergence (paper Fig. 4)."""
+    """Run Alg. 1 steps 1-4.
+
+    With `keep_history` (default) returns [N+1, T, D]: the table after each
+    iteration (index 0 = original), so callers can plot convergence (paper
+    Fig. 4). With `keep_history=False` returns only the final [T, D] table —
+    the N+1 table copies are never materialized, which is what the online
+    control plane wants for repeated refinements on large tool sets.
+    """
 
     def one_iteration(n, state):
         e_prev, history = state
@@ -98,28 +121,37 @@ def refine_embeddings(
             jnp.linalg.norm(blended, axis=-1, keepdims=True), 1e-9
         )
         e_new = jnp.where(n > 0, blended, e_hat)
-        history = history.at[n + 1].set(e_new)
+        if keep_history:  # static: the False branch never allocates the buffer
+            history = history.at[n + 1].set(e_new)
         return e_new, history
 
     t, d = tool_emb.shape
-    history0 = jnp.zeros((iterations + 1, t, d), tool_emb.dtype).at[0].set(tool_emb)
-    _, history = jax.lax.fori_loop(
+    history0 = (
+        jnp.zeros((iterations + 1, t, d), tool_emb.dtype).at[0].set(tool_emb)
+        if keep_history
+        else jnp.zeros((0,), tool_emb.dtype)
+    )
+    e_final, history = jax.lax.fori_loop(
         0, iterations, one_iteration, (tool_emb, history0)
     )
-    return history
+    return history if keep_history else e_final
 
 
-def _recall_at_k(
+def _gate_metric_at_k(
     query_emb: jnp.ndarray,
     tool_emb: jnp.ndarray,
     relevance: jnp.ndarray,
     candidate_mask: Optional[jnp.ndarray],
     k: int,
+    metric: str = "recall",
 ) -> jnp.ndarray:
     sims = query_emb @ tool_emb.T
     if candidate_mask is not None:
         sims = jnp.where(candidate_mask > 0, sims, -1e30)
     _, topk = jax.lax.top_k(sims, min(k, sims.shape[1]))
+    if metric == "ndcg":
+        return batched_ndcg_at_k(topk, relevance)
+    assert metric == "recall", f"unknown gate metric {metric!r}"
     return batched_recall_at_k(topk, relevance)
 
 
@@ -133,12 +165,15 @@ def refine_with_gate(
     train_candidate_mask: Optional[jnp.ndarray] = None,
     val_candidate_mask: Optional[jnp.ndarray] = None,
 ) -> RefineResult:
-    """Alg. 1 incl. step 5: accept refined table only if val Recall@K improves.
+    """Alg. 1 incl. step 5: accept the refined table only if the held-out
+    gate metric (Recall@K by default, NDCG@K via `config.gate_metric`) does
+    not degrade.
 
     The gate guarantees the deployed system cannot degrade below the static
     baseline (§4.1) — this invariant is property-tested.
+    `RefineResult.recall_before/after` hold whichever gate metric ran.
     """
-    history = refine_embeddings(
+    out = refine_embeddings(
         tool_emb,
         train_query_emb,
         train_relevance,
@@ -149,13 +184,17 @@ def refine_with_gate(
         momentum=config.momentum,
         k=config.k,
         positives=config.positives,
+        keep_history=config.keep_history,
     )
-    refined = history[-1]
-    r_before = _recall_at_k(
-        val_query_emb, tool_emb, val_relevance, val_candidate_mask, config.k
+    history = out if config.keep_history else None
+    refined = out[-1] if config.keep_history else out
+    r_before = _gate_metric_at_k(
+        val_query_emb, tool_emb, val_relevance, val_candidate_mask,
+        config.k, config.gate_metric,
     )
-    r_after = _recall_at_k(
-        val_query_emb, refined, val_relevance, val_candidate_mask, config.k
+    r_after = _gate_metric_at_k(
+        val_query_emb, refined, val_relevance, val_candidate_mask,
+        config.k, config.gate_metric,
     )
     accepted = r_after >= r_before
     final = jnp.where(accepted, refined, tool_emb)

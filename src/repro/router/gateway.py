@@ -8,7 +8,18 @@ offline control plane (`repro.core`); this module never touches a gradient.
 The router is deliberately stateless across requests (production routers are
 horizontally-scaled proxies); the mutable state is the swappable embedding
 table inside ToolsDatabase, a version-keyed device-side cache of that table
-(pure derived state, rebuilt from any snapshot), and the outcome log sink.
+(pure derived state, rebuilt from any snapshot), and the outcome sink.
+
+Outcome handoff: `record_outcome` either pushes each `OutcomeEvent` straight
+into an external sink (`outcome_sink=`, typically
+`repro.control.OutcomeStore.append` — the control plane's bounded store)
+or, with no sink configured, appends to a *bounded, lock-guarded* in-process
+buffer that `drain_outcomes()` hands to the refinement job. The buffer is a
+ring: an undrained router overwrites its oldest events rather than growing
+without limit (`outcomes_dropped` counts the overwrites), and both record
+and drain take the same lock, so a drain racing batched serving can never
+lose an event. The control plane's `RefinementController` drains attached
+routers on every step.
 
 Serving is batch-first: `route_batch` embeds, scores, and top-Ks Q queries
 in ONE jitted `topk_dense` call (plus one batched `rerank_topk_scored` call
@@ -23,8 +34,10 @@ when the re-ranker reordered the candidates.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
-from typing import Callable, List, Optional, Sequence
+from collections import deque
+from typing import Callable, Deque, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -67,6 +80,8 @@ class SemanticRouter:
         candidate_multiplier: int = 5,
         pool_selector: Optional[Callable[[np.ndarray, List[int]], str]] = None,
         embed_batch_fn: Optional[Callable[[Sequence[np.ndarray]], np.ndarray]] = None,
+        outcome_capacity: int = 65_536,
+        outcome_sink: Optional[Callable[["OutcomeEvent"], None]] = None,
     ):
         self.db = db
         self.embed_fn = embed_fn
@@ -78,7 +93,16 @@ class SemanticRouter:
         # batched encoder (one call for Q queries); falls back to looping
         # embed_fn so any single-query encoder still works batch-first
         self.embed_batch_fn = embed_batch_fn
-        self.outcome_log: List[OutcomeEvent] = []
+        # bounded ring: record under lock, drain under the same lock — the
+        # discipline ToolsDatabase uses for its table (a lock-free list drops
+        # events when a drain races batched serving). `outcome_sink` bypasses
+        # the ring entirely: events go straight to the control-plane store.
+        self.outcome_log: Deque[OutcomeEvent] = deque()
+        assert outcome_capacity >= 1, "outcome_capacity must be >= 1"
+        self.outcome_capacity = int(outcome_capacity)
+        self.outcomes_dropped = 0
+        self.outcome_sink = outcome_sink
+        self._outcome_lock = threading.Lock()
         self._device_table = (-1, None)  # (table_version, jnp table)
 
     # ---------------------------------------------------------- serving path
@@ -180,16 +204,24 @@ class SemanticRouter:
 
     # ------------------------------------------------------------ feedback
     def record_outcome(self, query_tokens: np.ndarray, tool_id: int, outcome: int):
-        self.outcome_log.append(
-            OutcomeEvent(
-                query_tokens=query_tokens,
-                tool_id=tool_id,
-                outcome=int(outcome),
-                timestamp=time.time(),
-            )
+        event = OutcomeEvent(
+            query_tokens=query_tokens,
+            tool_id=tool_id,
+            outcome=int(outcome),
+            timestamp=time.time(),
         )
+        if self.outcome_sink is not None:
+            self.outcome_sink(event)
+            return
+        with self._outcome_lock:
+            if len(self.outcome_log) >= self.outcome_capacity:
+                self.outcome_log.popleft()
+                self.outcomes_dropped += 1
+            self.outcome_log.append(event)
 
     def drain_outcomes(self) -> List[OutcomeEvent]:
         """Hand the accumulated log to the offline refinement job."""
-        log, self.outcome_log = self.outcome_log, []
+        with self._outcome_lock:
+            log = list(self.outcome_log)
+            self.outcome_log.clear()
         return log

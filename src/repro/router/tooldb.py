@@ -4,17 +4,28 @@ The serving-plane object the paper's Stage 1 updates: `swap_table` atomically
 replaces the embedding table after an offline refinement job passes the
 validation gate (§7.2 — "read outcome logs, compute centroid updates,
 validate, and swap the embedding table. No code changes to the serving
-path"). Keeps a rollback slot so deployment is instantly reversible.
+path"). Keeps a small bounded *version history* of superseded tables so
+deployment is instantly reversible: `rollback()` restores the most recent
+retained table, `rollback(to_version=...)` targets any retained version
+(the control plane's guard uses this to unwind a regressing swap even after
+further swaps have landed). A rollback discards the replaced table and every
+retained version newer than the target — they are dead lineage once the
+guard has condemned them.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
+from collections import OrderedDict
 from typing import List, Optional
 
 import numpy as np
 
-__all__ = ["ToolRecord", "ToolsDatabase"]
+__all__ = ["ToolRecord", "ToolsDatabase", "ConflictError"]
+
+
+class ConflictError(RuntimeError):
+    """A versioned operation lost a race: the table moved under the caller."""
 
 
 @dataclasses.dataclass
@@ -26,13 +37,21 @@ class ToolRecord:
 
 
 class ToolsDatabase:
-    """Thread-safe embedding table with atomic swap + rollback."""
+    """Thread-safe embedding table with atomic swap + versioned rollback."""
 
-    def __init__(self, records: List[ToolRecord], embeddings: np.ndarray):
+    def __init__(
+        self,
+        records: List[ToolRecord],
+        embeddings: np.ndarray,
+        history_limit: int = 4,
+    ):
         assert len(records) == embeddings.shape[0]
+        assert history_limit >= 1
         self._records = records
         self._table = embeddings.astype(np.float32)
-        self._previous: Optional[np.ndarray] = None
+        # superseded tables, oldest first: {version -> table at that version}
+        self._history: "OrderedDict[int, np.ndarray]" = OrderedDict()
+        self._history_limit = history_limit
         self._lock = threading.Lock()
         self.table_version = 0
 
@@ -56,22 +75,74 @@ class ToolsDatabase:
     def categories(self) -> np.ndarray:
         return np.array([r.category for r in self._records], dtype=np.int64)
 
-    def swap_table(self, new_table: np.ndarray) -> int:
-        """Atomically deploy a refined embedding table (returns new version)."""
+    def retained_versions(self) -> List[int]:
+        """Versions currently available as rollback targets, oldest first."""
+        with self._lock:
+            return list(self._history.keys())
+
+    def swap_table(
+        self, new_table: np.ndarray, expect_current: Optional[int] = None
+    ) -> int:
+        """Atomically deploy a refined embedding table (returns new version).
+
+        The outgoing table is retained as a rollback target; the history is
+        bounded at `history_limit` entries (oldest evicted first).
+
+        `expect_current` makes the swap compare-and-swap: a deployment
+        derived from version N is refused (ConflictError) if the table has
+        moved past N while it was being computed, instead of silently
+        clobbering someone else's swap.
+        """
         assert new_table.shape == self._table.shape, (
             f"table shape {new_table.shape} != {self._table.shape}"
         )
         with self._lock:
-            self._previous = self._table
+            if expect_current is not None and self.table_version != expect_current:
+                raise ConflictError(
+                    f"table is v{self.table_version}, not v{expect_current} "
+                    f"the deployment was derived from; refusing swap"
+                )
+            self._history[self.table_version] = self._table
+            while len(self._history) > self._history_limit:
+                self._history.popitem(last=False)
             self._table = new_table.astype(np.float32)
             self.table_version += 1
             return self.table_version
 
-    def rollback(self) -> int:
-        """Instant rollback to the previous table (§7.2)."""
+    def rollback(
+        self, to_version: Optional[int] = None, expect_current: Optional[int] = None
+    ) -> int:
+        """Instant rollback (§7.2) to a retained version's table.
+
+        Default target is the most recent retained version (the table that
+        served immediately before the current one). Restoring bumps
+        `table_version` — a rollback is itself a swap, so serving snapshots
+        stay strictly versioned. The condemned current table is *not*
+        retained, and retained versions newer than the target are dropped.
+
+        `expect_current` makes the rollback compare-and-swap: if another
+        swap landed after the caller judged version `expect_current`, the
+        rollback is refused (ConflictError) instead of condemning a table
+        the caller never evaluated — the guard's safety hinge.
+        """
         with self._lock:
-            if self._previous is None:
+            if expect_current is not None and self.table_version != expect_current:
+                raise ConflictError(
+                    f"table is v{self.table_version}, not the judged "
+                    f"v{expect_current}; refusing rollback"
+                )
+            if not self._history:
                 raise RuntimeError("no previous table to roll back to")
-            self._table, self._previous = self._previous, None
+            if to_version is None:
+                to_version = next(reversed(self._history))
+            if to_version not in self._history:
+                raise RuntimeError(
+                    f"version {to_version} not retained "
+                    f"(available: {list(self._history.keys())})"
+                )
+            table = self._history.pop(to_version)
+            for v in [v for v in self._history if v > to_version]:
+                del self._history[v]
+            self._table = table
             self.table_version += 1
             return self.table_version

@@ -1,0 +1,476 @@
+"""Control-plane tests: OutcomeStore ring/counters/masks/persistence,
+RefinementController trigger + gate semantics, TableGuard rollback, the
+generalized ToolsDatabase version history, and a threaded smoke test of
+route_batch concurrent with table swaps."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.control import (
+    ControllerConfig,
+    GuardConfig,
+    OutcomeStore,
+    RefinementController,
+    TableGuard,
+)
+from repro.core.outcomes import masks_from_stream
+from repro.core.refine import RefineConfig
+from repro.embedding.bag_encoder import BagEncoder
+from repro.router.gateway import OutcomeEvent, SemanticRouter
+from repro.router.tooldb import ToolRecord, ToolsDatabase
+
+
+def _event(tokens, tool_id, outcome, ts=0.0):
+    return OutcomeEvent(
+        query_tokens=np.asarray(tokens, dtype=np.int64),
+        tool_id=tool_id,
+        outcome=outcome,
+        timestamp=ts,
+    )
+
+
+def _db_and_encoder(bench, **kw):
+    enc = BagEncoder(bench.vocab)
+    records = [
+        ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
+        for i in range(bench.n_tools)
+    ]
+    return ToolsDatabase(records, enc.encode(bench.desc_tokens), **kw), enc
+
+
+# ---------------------------------------------------------------- OutcomeStore
+
+
+def test_store_ring_eviction_keeps_counters_consistent():
+    store = OutcomeStore(n_tools=4, capacity=3)
+    for i, (tool, out) in enumerate([(0, 1), (1, 0), (2, 1), (3, 1)]):
+        store.append(_event([i], tool, out))
+    # capacity 3: the first event (tool 0 positive) was evicted
+    assert len(store) == 3
+    assert store.total_ingested == 4
+    assert store.dropped == 1
+    pos, neg = store.tool_counts()
+    np.testing.assert_array_equal(pos, [0, 0, 1, 1])
+    np.testing.assert_array_equal(neg, [0, 1, 0, 0])
+
+
+def test_store_dedupes_queries_and_builds_masks():
+    store = OutcomeStore(n_tools=3, capacity=100)
+    q_a, q_b = [1, 2, 3], [4, 5]
+    store.ingest([
+        _event(q_a, 0, 1),
+        _event(q_a, 1, 0),
+        _event(q_b, 2, 1),
+        _event(q_a, 1, 1),  # later success on same (query, tool): pos wins
+    ])
+    batch = store.build_refinement_batch(
+        lambda toks: np.ones((len(toks), 8), np.float32)
+    )
+    assert batch.n_queries == 2 and batch.n_events == 4
+    np.testing.assert_array_equal(batch.pos_mask, [[1, 1, 0], [0, 0, 1]])
+    assert batch.neg_mask.sum() == 0  # the lone negative was vetoed
+    assert (batch.pos_mask * batch.neg_mask).sum() == 0
+
+
+def test_masks_from_stream_pos_vetoes_neg():
+    pos, neg = masks_from_stream(
+        query_ids=[0, 0, 1], tool_ids=[2, 2, 0], outcomes=[0, 1, 0],
+        n_queries=2, n_tools=3,
+    )
+    assert pos[0, 2] == 1 and neg[0, 2] == 0
+    assert neg[1, 0] == 1 and pos[1, 0] == 0
+
+
+def test_store_persistence_roundtrip(tmp_path):
+    store = OutcomeStore(n_tools=5, capacity=4)
+    for i in range(6):  # overflow: 2 evictions
+        store.append(_event([i, i + 1], i % 5, i % 2, ts=float(i)))
+    path = str(tmp_path / "store")
+    store.save(path, step=3)
+    restored = OutcomeStore.restore(path)
+    assert restored.n_tools == 5 and restored.capacity == 4
+    assert len(restored) == len(store) == 4
+    assert restored.total_ingested == 6 and restored.dropped == 2
+    for a, b in zip(store.snapshot_events(), restored.snapshot_events()):
+        np.testing.assert_array_equal(a.query_tokens, b.query_tokens)
+        assert (a.tool_id, a.outcome, a.timestamp) == (b.tool_id, b.outcome, b.timestamp)
+    np.testing.assert_array_equal(
+        np.stack(store.tool_counts()), np.stack(restored.tool_counts())
+    )
+
+
+# ------------------------------------------------------------------- ToolsDB
+
+
+def test_versioned_rollback_history():
+    rng = np.random.default_rng(0)
+    emb = rng.normal(size=(6, 8)).astype(np.float32)
+    db = ToolsDatabase(
+        [ToolRecord(i, f"t{i}", np.arange(2), 0) for i in range(6)],
+        emb, history_limit=2,
+    )
+    tables = {0: db.embeddings.copy()}
+    for v in range(1, 4):
+        tables[v] = np.roll(emb, v, axis=0)
+        db.swap_table(tables[v])
+    # history bounded at 2: version 0 evicted
+    assert db.retained_versions() == [1, 2]
+    with pytest.raises(RuntimeError):
+        db.rollback(to_version=0)
+    v = db.rollback(to_version=1)  # explicit target skips newer retained v2
+    assert v == 4 and db.table_version == 4
+    np.testing.assert_array_equal(db.embeddings, tables[1])
+    assert db.retained_versions() == []  # v2 was dead lineage, dropped
+    with pytest.raises(RuntimeError):
+        db.rollback()
+
+
+def test_default_rollback_targets_most_recent():
+    emb = np.eye(4, dtype=np.float32)
+    db = ToolsDatabase(
+        [ToolRecord(i, f"t{i}", np.arange(1), 0) for i in range(4)], emb
+    )
+    db.swap_table(np.roll(emb, 1, axis=0))
+    db.swap_table(np.roll(emb, 2, axis=0))
+    db.rollback()  # default: most recent retained (v1)
+    np.testing.assert_array_equal(db.embeddings, np.roll(emb, 1, axis=0))
+    assert db.retained_versions() == [0]  # deeper history still available
+    db.rollback()
+    np.testing.assert_array_equal(db.embeddings, emb)
+
+
+# ---------------------------------------------------------------- Controller
+
+
+def _stub_refine(accepted, delta=0.0):
+    """A refine_fn stand-in with a deterministic gate decision."""
+    import jax.numpy as jnp
+
+    def fn(table, tq, tr, vq, vr, config):
+        from repro.core.refine import RefineResult
+
+        return RefineResult(
+            embeddings=table + delta,
+            accepted=jnp.asarray(accepted),
+            recall_before=jnp.asarray(0.5),
+            recall_after=jnp.asarray(0.5 + (0.1 if accepted else -0.1)),
+            history=None,
+        )
+
+    return fn
+
+
+def _controller_world(small_bench, refine_fn, *, min_events=50, guard=None,
+                      clock=None, max_interval_s=300.0):
+    db, enc = _db_and_encoder(small_bench)
+    store = OutcomeStore(n_tools=len(db), capacity=10_000)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        outcome_sink=store.append,
+    )
+    cfg = ControllerConfig(
+        min_events=min_events, max_interval_s=max_interval_s,
+        min_queries=5, refine=RefineConfig(keep_history=False),
+    )
+    kw = {} if clock is None else {"clock": clock}
+    ctl = RefinementController(
+        db, store, enc.encode, routers=[router], config=cfg,
+        guard=guard, refine_fn=refine_fn, **kw,
+    )
+    return db, store, router, ctl
+
+
+def _serve(router, bench, idx):
+    for qi in idx:
+        res = router.route(bench.query_tokens[qi])
+        for t in res.tools:
+            router.record_outcome(
+                bench.query_tokens[qi], t, int(t in bench.relevant[qi])
+            )
+
+
+def test_controller_event_count_trigger(small_bench):
+    db, store, router, ctl = _controller_world(
+        small_bench, _stub_refine(True), min_events=100
+    )
+    _serve(router, small_bench, small_bench.train_idx[:10])  # 50 events < 100
+    rep = ctl.step()
+    assert not rep.triggered and not rep.swapped
+    assert db.table_version == 0
+    _serve(router, small_bench, small_bench.train_idx[10:30])  # now 150 total
+    rep = ctl.step()
+    assert rep.triggered and rep.swapped and rep.accepted
+    assert db.table_version == 1
+    assert "swapped v0 -> v1" in rep.reason
+    # watermark consumed: no new events -> no re-trigger
+    rep = ctl.step()
+    assert not rep.triggered
+
+
+def test_controller_staleness_trigger(small_bench):
+    t = [0.0]
+    db, store, router, ctl = _controller_world(
+        small_bench, _stub_refine(True), min_events=10_000,
+        clock=lambda: t[0], max_interval_s=60.0,
+    )
+    _serve(router, small_bench, small_bench.train_idx[:10])  # far below count
+    rep = ctl.step()
+    assert not rep.triggered
+    t[0] = 61.0  # stale + at least one new event -> trigger
+    rep = ctl.step()
+    assert rep.triggered and rep.swapped
+    t[0] = 130.0  # stale again but no new events -> idle router stays idle
+    rep = ctl.step()
+    assert not rep.triggered
+
+
+def test_controller_skips_gate_without_positive_queries(small_bench):
+    """A window of failure-only outcomes must not deploy: all-zero relevance
+    rows are excluded from recall, so the gate would accept vacuously."""
+    db, enc = _db_and_encoder(small_bench)
+    store = OutcomeStore(n_tools=len(db))
+    ctl = RefinementController(
+        db, store, enc.encode,
+        config=ControllerConfig(min_events=1, min_queries=1),
+        refine_fn=_stub_refine(True),
+    )
+    store.ingest([_event([i, i + 1], i % len(db), 0) for i in range(30)])
+    rep = ctl.step()
+    assert rep.triggered and not rep.swapped
+    assert "positive queries" in rep.reason
+    assert db.table_version == 0
+
+
+def test_controller_gate_reject_leaves_table_untouched(small_bench):
+    db, store, router, ctl = _controller_world(
+        small_bench, _stub_refine(False), min_events=50
+    )
+    before = db.embeddings.copy()
+    _serve(router, small_bench, small_bench.train_idx[:30])
+    rep = ctl.step()
+    assert rep.triggered and rep.accepted is False and not rep.swapped
+    assert "gate rejected" in rep.reason
+    assert db.table_version == 0
+    np.testing.assert_array_equal(db.embeddings, before)
+
+
+def test_controller_real_refinement_improves_recall(small_bench):
+    """End-to-end with the real refine_with_gate: streamed outcomes -> swap
+    -> held-out recall through the live router does not degrade."""
+    from repro.core.refine import refine_with_gate
+
+    db, enc = _db_and_encoder(small_bench)
+    store = OutcomeStore(n_tools=len(db), capacity=50_000)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        outcome_sink=store.append,
+    )
+    ctl = RefinementController(
+        db, store, enc.encode, routers=[router],
+        config=ControllerConfig(min_events=100, min_queries=20),
+    )
+
+    def recall(idx):
+        hits = 0
+        for qi in idx:
+            res = router.route(small_bench.query_tokens[qi])
+            hits += int(small_bench.relevant[qi][0] in res.tools)
+        return hits / len(idx)
+
+    test_idx = small_bench.test_idx[:60]
+    before = recall(test_idx)
+    _serve(router, small_bench, small_bench.train_idx)
+    rep = ctl.step()
+    assert rep.triggered
+    after = recall(test_idx)
+    assert after >= before - 0.02  # gate guarantee (split-noise tolerance)
+    if rep.swapped:
+        assert db.table_version == 1
+
+
+def test_guard_rollback_restores_prior_version(small_bench):
+    db, enc = _db_and_encoder(small_bench)
+    guard = TableGuard(db, GuardConfig(k=5, min_samples=8, tolerance=0.02))
+    good = db.embeddings.copy()
+    # healthy traffic on v0 (observed ranking hits the relevant tool)
+    for _ in range(10):
+        guard.observe(0, [1, 2, 3, 4, 5], [1])
+    assert guard.check().action == "no_baseline"  # v0 has no predecessor
+    # a bad swap lands out-of-band (no note_swap — the bypass case)
+    db.swap_table(np.roll(good, 3, axis=0))
+    for _ in range(10):
+        guard.observe(1, [7, 8, 9, 10, 11], [1])  # misses everywhere
+    rep = guard.check()
+    assert rep.action == "rolled_back"
+    assert rep.table_version == 1 and rep.restored_version == 2
+    assert rep.baseline is not None and rep.ndcg < rep.baseline
+    np.testing.assert_array_equal(db.embeddings, good)
+    # restored table is its own baseline: never judged, never flaps
+    for _ in range(10):
+        guard.observe(2, [7, 8, 9, 10, 11], [1])
+    assert guard.check().action == "no_baseline"
+
+
+def test_guard_regression_without_history_is_distinct(small_bench):
+    """A confirmed regression with nothing to restore must be reported as
+    its own alertable state, not conflated with 'nothing to judge'."""
+    db, enc = _db_and_encoder(small_bench, history_limit=1)
+    guard = TableGuard(db, GuardConfig(min_samples=4, tolerance=0.02))
+    for _ in range(5):
+        guard.observe(0, [1, 2, 3, 4, 5], [1])
+    db.swap_table(np.roll(db.embeddings, 3, axis=0))
+    db.rollback()  # history consumed: v2 live, nothing retained
+    guard.note_swap(0, 2)  # baseline inherited, but no rollback target
+    for _ in range(5):
+        guard.observe(2, [7, 8, 9, 10, 11], [1])
+    rep = guard.check()
+    assert rep.action == "regressed_unrestorable"
+    assert rep.baseline is not None and rep.ndcg < rep.baseline
+    assert db.table_version == 2  # no rollback happened
+
+
+def test_guard_rollback_refused_when_table_moved(small_bench):
+    """Compare-and-swap rollback: a swap landing after judgement must make
+    the guard stand down, never condemn a table it did not evaluate."""
+    from repro.router.tooldb import ConflictError
+
+    db, enc = _db_and_encoder(small_bench)
+    with pytest.raises(ConflictError):
+        db.swap_table(np.roll(db.embeddings, 1, axis=0))
+        db.rollback(expect_current=0)  # judged v0, but v1 is live
+    guard = TableGuard(db, GuardConfig(min_samples=4, tolerance=0.02))
+    # make v1 look judged-bad with a real baseline, then race a swap in
+    # before check() by patching rollback to simulate the interleaving
+    for _ in range(5):
+        guard.observe(0, [1, 2, 3], [1])
+    guard.note_swap(0, 1)
+    for _ in range(5):
+        guard.observe(1, [7, 8, 9], [1])
+    real_rollback = db.rollback
+
+    def racing_rollback(*a, **kw):
+        # another swap lands between judgement and rollback
+        db.swap_table(np.roll(db.embeddings, 2, axis=0))
+        return real_rollback(*a, **kw)
+
+    db.rollback = racing_rollback
+    try:
+        rep = guard.check()
+    finally:
+        db.rollback = real_rollback
+    assert rep.action == "stale"
+    assert not guard.rollbacks
+
+
+def test_controller_cooldown_after_guard_rollback(small_bench):
+    db, enc = _db_and_encoder(small_bench)
+    guard = TableGuard(db, GuardConfig(min_samples=4, tolerance=0.02))
+    store = OutcomeStore(n_tools=len(db))
+    ctl = RefinementController(
+        db, store, enc.encode,
+        config=ControllerConfig(min_events=1, min_queries=1),
+        guard=guard, refine_fn=_stub_refine(True),
+    )
+    for _ in range(5):
+        guard.observe(0, [0, 1, 2, 3, 4], [0])
+    db.swap_table(np.roll(db.embeddings, 1, axis=0))
+    for _ in range(5):
+        guard.observe(1, [7, 8, 9, 10, 11], [0])
+    _serve_events = [_event([1, 2], 0, 1) for _ in range(10)]
+    store.ingest(_serve_events)
+    rep = ctl.step()
+    assert rep.guard.action == "rolled_back"
+    assert not rep.triggered and "cooldown" in rep.reason
+    assert db.table_version == 2  # rollback bumped, controller did NOT swap
+    # condemned-era evidence purged: the next trigger can't rebuild and
+    # re-swap the same bad table from the same window (flap prevention)
+    assert len(store) == 0
+    rep = ctl.step()
+    assert not rep.triggered  # watermark consumed, no fresh events
+
+
+# ------------------------------------------------------- threaded smoke test
+
+
+@pytest.mark.slow
+def test_route_batch_concurrent_with_swaps(small_bench):
+    """Every RouteResult must be internally consistent with ONE table that
+    actually served: its table_version's table reproduces its scores."""
+    db, enc = _db_and_encoder(small_bench, history_limit=3)
+    router = SemanticRouter(db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5)
+    rng = np.random.default_rng(0)
+    base = db.embeddings.copy()
+    tables = {0: base}
+    version_lock = threading.Lock()
+    stop = threading.Event()
+
+    def churn():
+        i = 0
+        while not stop.is_set():
+            new = np.roll(base, (i % 5) + 1, axis=0)
+            with version_lock:
+                v = db.swap_table(new)
+                tables[v] = new
+            i += 1
+            time.sleep(0.001)
+
+    t = threading.Thread(target=churn, daemon=True)
+    t.start()
+    try:
+        queries = [small_bench.query_tokens[qi] for qi in small_bench.test_idx[:16]]
+        q_emb = enc.encode(queries)
+        for _ in range(30):
+            results = router.route_batch(queries)
+            versions = {r.table_version for r in results}
+            assert len(versions) == 1  # one snapshot per batch
+            v = versions.pop()
+            with version_lock:
+                table = tables[v]
+            sims = q_emb @ table.T
+            for j, r in enumerate(results):
+                expected = np.sort(sims[j])[::-1][: len(r.scores)]
+                np.testing.assert_allclose(
+                    np.asarray(r.scores), expected, atol=1e-4,
+                    err_msg=f"scores inconsistent with table v{v}",
+                )
+    finally:
+        stop.set()
+        t.join()
+
+
+@pytest.mark.slow
+def test_record_outcome_concurrent_with_drain():
+    """The locked ring never loses an event to a racing drain."""
+    db = ToolsDatabase(
+        [ToolRecord(i, f"t{i}", np.arange(1), 0) for i in range(4)],
+        np.eye(4, dtype=np.float32),
+    )
+    router = SemanticRouter(
+        db, embed_fn=lambda t: np.ones(4, np.float32), outcome_capacity=100_000
+    )
+    n_writers, n_each = 4, 2000
+    drained = []
+    stop = threading.Event()
+
+    def writer(w):
+        for i in range(n_each):
+            router.record_outcome(np.asarray([w, i]), w, 1)
+
+    def drainer():
+        while not stop.is_set():
+            drained.extend(router.drain_outcomes())
+        drained.extend(router.drain_outcomes())
+
+    d = threading.Thread(target=drainer)
+    ws = [threading.Thread(target=writer, args=(w,)) for w in range(n_writers)]
+    d.start()
+    for w in ws:
+        w.start()
+    for w in ws:
+        w.join()
+    stop.set()
+    d.join()
+    assert router.outcomes_dropped == 0
+    assert len(drained) == n_writers * n_each

@@ -30,7 +30,7 @@ def test_swap_and_rollback(small_bench):
     db.rollback()
     np.testing.assert_array_equal(db.embeddings, orig)
     with pytest.raises(RuntimeError):
-        db.rollback()  # only one rollback slot
+        db.rollback()  # version history exhausted
     with pytest.raises(AssertionError):
         db.swap_table(np.zeros((3, 3), np.float32))  # shape guard
 
