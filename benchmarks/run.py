@@ -1,12 +1,20 @@
-"""Benchmark driver: one function per paper table (DESIGN.md §8).
+"""Benchmark driver: one function per paper table, plus the subsystem
+benches (DESIGN.md §8).
 
-  PYTHONPATH=src python -m benchmarks.run [--fast] [--tables table4,fig4]
+  PYTHONPATH=src python -m benchmarks.run [--smoke] [--tables table4,fig4,router]
 
-Prints ``name,us_per_call,derived`` CSV. Selection tables use the full-scale
-synthetic benchmarks (199/4,287 and 2,413/600); latency rows measure the real
-CPU serving path including the 22M-parameter encoder forward. Roofline rows
-are emitted if experiments/dryrun/*.json exist (run repro.launch.dryrun
-first).
+Two kinds of benchmark live behind one registry and ONE `--smoke` flag:
+
+  * paper tables (`benchmarks.tables.ALL_TABLES` + roofline/kernels) print
+    ``name,us_per_call,derived`` CSV rows to stdout;
+  * subsystem suites (`router`, `control`, `index`) are the recorded-number
+    benches — each writes its own ``BENCH_<name>[_smoke].json`` artifact and
+    prints its own summary. They are the same entry points CI smoke-runs
+    (`scripts/ci_check.sh`), so `--smoke` means the same reduced scale
+    everywhere instead of per-file ad-hoc handling.
+
+`--tables all` (default) runs everything; `--fast` is kept as a deprecated
+alias for `--smoke`.
 """
 from __future__ import annotations
 
@@ -16,27 +24,57 @@ import sys
 import time
 
 
+def _suite_registry():
+    """name -> run(smoke=..., seed=..., out=...) for the subsystem benches."""
+    from benchmarks import control_bench, index_bench, router_bench
+
+    return {
+        "router": router_bench.run,
+        "control": control_bench.run,
+        "index": index_bench.run,
+    }
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true", help="reduced benchmark scale")
-    ap.add_argument("--tables", default="all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced scale everywhere (tables AND suite benches)")
+    ap.add_argument("--fast", action="store_true",
+                    help="deprecated alias for --smoke")
+    ap.add_argument("--tables", default="all",
+                    help="comma list of paper tables and/or suites "
+                         "(router,control,index)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    smoke = args.smoke or args.fast
 
     from benchmarks.context import BenchContext
     from benchmarks.kernel_bench import kernel_rows
     from benchmarks.roofline import roofline_rows
     from benchmarks.tables import ALL_TABLES
 
-    want = list(ALL_TABLES) + ["roofline", "kernels"]
+    suites = _suite_registry()
+    want = list(ALL_TABLES) + ["roofline", "kernels"] + list(suites)
     if args.tables != "all":
         want = args.tables.split(",")
+    unknown = [t for t in want
+               if t not in ALL_TABLES and t not in suites
+               and t not in ("roofline", "kernels")]
+    if unknown:
+        raise SystemExit(f"unknown benchmark(s): {unknown} "
+                         f"(tables: {list(ALL_TABLES)}; suites: {list(suites)})")
+
+    for name in want:
+        if name in suites:
+            out = f"BENCH_{name}{'_smoke' if smoke else ''}.json"
+            print(f"# suite {name} -> {out}", flush=True)
+            suites[name](smoke=smoke, seed=args.seed, out=out)
 
     rows = []
     needs_ctx = any(t in ALL_TABLES for t in want)
     if needs_ctx:
         t0 = time.time()
-        ctx = BenchContext.build(seed=args.seed, fast=args.fast)
+        ctx = BenchContext.build(seed=args.seed, fast=smoke)
         print(f"# context built in {time.time() - t0:.1f}s", flush=True)
         for tname in want:
             if tname in ALL_TABLES:
@@ -49,9 +87,10 @@ def main(argv=None) -> None:
     if "kernels" in want:
         rows.extend(kernel_rows())
 
-    print("name,us_per_call,derived")
-    for r in rows:
-        print(f"{r['name']},{r['us_per_call']},{json.dumps(r['derived'])}")
+    if rows or needs_ctx:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']},{json.dumps(r['derived'])}")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,30 @@
 """Serve a small backend with batched requests through the OATS gateway.
 
-  PYTHONPATH=src python examples/serve_gateway.py
+  PYTHONPATH=src python examples/serve_gateway.py [--backend {dense,ivf,pallas}]
+      [--num-tools N]
 
 Thin wrapper over the production launcher (launch/serve.py): synthetic tool
 DB -> OATS-S1 refinement -> table swap -> route batched requests -> backend
 prefill+decode -> outcome logging.
+
+The flag pair demos the PR 3 index layer end to end, e.g.
+
+  python examples/serve_gateway.py --backend ivf --num-tools 25000
+
+tiles + perturbs the refined 199-tool table to 25k entries
+(`scale_tool_corpus`) and serves it through the IVF coarse-quantized index
+instead of brute force — same gateway, same outcome loop, registry scale.
 """
+import argparse
+
 from repro.launch.serve import main
+
+ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+ap.add_argument("--backend", default="dense", choices=("dense", "ivf", "pallas"),
+                help="index scorer behind route_batch (repro.index)")
+ap.add_argument("--num-tools", type=int, default=0,
+                help="scale the tool table to this size (0 = native 199)")
+args = ap.parse_args()
 
 main([
     "--arch", "hymba-1.5b", "--smoke",
@@ -16,4 +34,6 @@ main([
     "--max-new-tokens", "8",
     "--n-tools", "199",
     "--n-queries", "1500",
+    "--backend", args.backend,
+    "--num-tools", str(args.num_tools),
 ])

@@ -5,12 +5,15 @@
 #   bash scripts/ci_check.sh [extra pytest args...]
 #
 # The smoke benches write BENCH_*_smoke.json (scaled-down batches/iters);
-# the full recorded numbers live in BENCH_router.json / BENCH_control.json via
-#   PYTHONPATH=src python -m benchmarks.router_bench
-#   PYTHONPATH=src python -m benchmarks.control_bench
+# the full recorded numbers live in BENCH_router.json / BENCH_control.json /
+# BENCH_index.json via
+#   PYTHONPATH=src python -m benchmarks.run            (all suites)
+#   PYTHONPATH=src python -m benchmarks.<suite>_bench  (one suite)
 # control_bench runs the whole outcome->refine->validate->swap loop (plus
 # route_batch under concurrent swaps), so any gate/guard/controller exception
-# — or a p99 past the 10 ms budget — fails CI here.
+# — or a p99 past the 10 ms budget — fails CI here. index_bench smoke-runs
+# the backend matrix at the 25k-tool scale and fails CI if the IVF p99/query
+# exceeds the 10 ms budget (or its Recall@5 vs exact drops below 0.98).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -21,3 +24,5 @@ python -m pytest -x -q "$@"
 python -m benchmarks.router_bench --smoke --out BENCH_router_smoke.json
 
 python -m benchmarks.control_bench --smoke --out BENCH_control_smoke.json
+
+python -m benchmarks.index_bench --smoke --out BENCH_index_smoke.json

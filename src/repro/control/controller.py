@@ -24,6 +24,15 @@ grows them — it never trains serving-path models mid-flight today.
 The validation slice is a deterministic per-refinement split of the *unique
 queries* in the window (not of raw events: a query's K outcome events must
 land on one side of the split, or the gate validates on its own train set).
+
+Index layer (PR 3): when routers serve through a non-dense
+`repro.index.ToolIndexManager`, every swap/rollback this loop performs
+invalidates the built index. The managers' own `ToolsDatabase` swap
+listeners kick the async rebuild the moment the table moves; the controller
+additionally refreshes any managers passed via `indexes=` at the end of
+each step and records `ControllerReport.index_fresh`, so operators can see
+fallback-serving windows (exact dense scoring while a rebuild is in
+flight) in the step log.
 """
 from __future__ import annotations
 
@@ -76,6 +85,10 @@ class ControllerReport:
     swapped: bool = False
     table_version: int = -1  # live version when the step finished
     guard: Optional[GuardReport] = None
+    # index-layer freshness at step end (None when no managers attached):
+    # False means a swap/rollback this step left at least one ToolIndexManager
+    # rebuilding, i.e. its router is serving the exact dense fallback
+    index_fresh: Optional[bool] = None
 
 
 class RefinementController:
@@ -89,6 +102,7 @@ class RefinementController:
         guard: Optional[TableGuard] = None,
         clock: Callable[[], float] = time.monotonic,
         refine_fn: Callable = refine_with_gate,  # injectable for tests
+        indexes: Sequence = (),  # ToolIndexManagers to keep fresh across swaps
     ):
         self.db = db
         self.store = store
@@ -96,6 +110,10 @@ class RefinementController:
         self.routers = list(routers)
         self.config = config
         self.guard = guard
+        # rebuild-on-swap: managers already watch the db through their swap
+        # listener; the controller's job is (a) belt-and-braces refresh after
+        # its own swaps/rollbacks and (b) reporting fallback-serving windows
+        self.indexes = list(indexes)
         self.clock = clock
         self.refine_fn = refine_fn
         self.reports: List[ControllerReport] = []
@@ -131,6 +149,14 @@ class RefinementController:
             report = self._refine_step()
         report.guard = guard_report
         report.table_version = self.db.table_version
+        if self.indexes:
+            for manager in self.indexes:
+                # honor each manager's build mode: a synchronous manager
+                # (async_rebuild=False, the deterministic/test mode) must be
+                # fresh when the step returns; async managers get a no-op
+                # poke when already fresh/building
+                manager.refresh(block=not getattr(manager, "async_rebuild", True))
+            report.index_fresh = all(m.is_fresh() for m in self.indexes)
         self.reports.append(report)
         return report
 

@@ -41,6 +41,7 @@ __all__ = [
     "make_metatool_like",
     "make_toolbench_like",
     "make_benchmark",
+    "scale_tool_corpus",
 ]
 
 SUBTASKS = ("similar", "scenario", "reliability", "multi")
@@ -321,6 +322,36 @@ def make_benchmark(
         train_idx=train_idx,
         test_idx=test_idx,
     )
+
+
+def scale_tool_corpus(
+    table: np.ndarray,
+    n_tools: int,
+    seed: int = 0,
+    noise: float = 0.02,
+) -> np.ndarray:
+    """Tile + perturb a real tool table to MCP-registry scale (PR 3).
+
+    The paper's tables stop at 2,413 tools; public MCP registries reach tens
+    of thousands. This scaler preserves the structure index benchmarks care
+    about: row `i` is a perturbed clone of source row `i % T` (provenance by
+    modulo), so the scaled corpus keeps the real table's topic geometry —
+    clusters of near-duplicate tools around each true tool direction, the
+    regime where IVF coarse quantization must still separate neighbors. The
+    first `T` rows are the original table bit-exact; clones get iid gaussian
+    perturbation (`noise` per dimension) and are re-unit-normalized.
+    Deterministic in `seed`.
+    """
+    base = np.asarray(table, np.float32)
+    t = base.shape[0]
+    assert n_tools >= t, f"cannot scale {t} tools down to {n_tools}"
+    reps = -(-n_tools // t)  # ceil
+    big = np.tile(base, (reps, 1))[:n_tools].copy()
+    rng = np.random.default_rng(seed)
+    clones = big[t:]
+    clones += noise * rng.standard_normal(size=clones.shape).astype(np.float32)
+    clones /= np.maximum(np.linalg.norm(clones, axis=-1, keepdims=True), 1e-9)
+    return big
 
 
 def make_metatool_like(seed: int = 0, n_tools: int = 199, n_queries: int = 4287) -> Benchmark:

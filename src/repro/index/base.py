@@ -1,0 +1,55 @@
+"""ScorerBackend: the contract every tool-index backend serves behind.
+
+A backend is an *immutable* index built from one atomic table snapshot: it
+captures `(table_version, table)` at build time and answers batched top-K
+similarity queries against exactly that table until it is replaced. All
+mutability lives one layer up in `ToolIndexManager`, which owns the
+build/swap lifecycle — this split is what keeps the PR 2 swap/rollback
+protocol intact: a backend can never serve scores from one version while
+reporting another.
+
+Contract (`topk`):
+
+  * input `queries` is a `[Q, D]` float32 block of unit rows (the gateway's
+    padded batch); `k` is the candidate count the caller wants back;
+  * output is `(scores [Q, k] float32, indices [Q, k] int)` sorted by
+    descending score per row. Slots that cannot be filled (masked-out, or
+    fewer than `k` reachable candidates) carry the `NEG_INF` sentinel score
+    shared with `core.retrieval` — callers already filter on
+    `score > NEG_INF / 2`, so short results flow through `route_batch`
+    unchanged;
+  * `scores` must be the scores the final ranking was computed from
+    (exact fp32 similarities after any approximate shortlist), so
+    `RouteResult.scores` stays meaningful across backends;
+  * backends that cannot honor per-query candidate masks declare
+    `supports_masks = False`; `ToolIndexManager` routes masked batches to
+    the exact dense fallback instead of calling them with one.
+"""
+from __future__ import annotations
+
+from typing import Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core.retrieval import NEG_INF
+
+__all__ = ["NEG_INF", "ScorerBackend"]
+
+
+@runtime_checkable
+class ScorerBackend(Protocol):
+    """Batched top-K similarity scoring over one immutable table snapshot."""
+
+    name: str  # registry key ("dense" | "ivf" | "pallas")
+    table_version: int  # ToolsDatabase version the index was built from
+    n_tools: int  # rows in the indexed table
+    supports_masks: bool  # can honor [Q, T] candidate masks natively
+
+    def topk(
+        self,
+        queries: np.ndarray,  # [Q, D] float32 unit rows
+        k: int,
+        candidate_mask: Optional[np.ndarray] = None,  # [Q, T] {0,1} or None
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """(scores [Q, k], indices [Q, k]) by descending similarity."""
+        ...

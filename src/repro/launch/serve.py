@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.pipeline import OATSPipeline, PipelineConfig, STAGE_PRESETS
-from repro.data.benchmarks import make_metatool_like
+from repro.data.benchmarks import make_metatool_like, scale_tool_corpus
 from repro.embedding.bag_encoder import BagEncoder
 from repro.models import model as M
 from repro.models.config import reduced
@@ -28,22 +28,62 @@ from repro.router.latency import measure_latency, percentile_stats
 from repro.router.tooldb import ToolRecord, ToolsDatabase
 
 
-def build_router(bench, stage: str = "oats-s1", k: int = 5):
+def build_router(
+    bench,
+    stage: str = "oats-s1",
+    k: int = 5,
+    backend: str = "dense",
+    num_tools: int = 0,
+    seed: int = 0,
+):
+    """Gateway over the refined table; `backend` picks the index scorer.
+
+    `num_tools > bench.n_tools` tiles + perturbs the refined table to that
+    size (`scale_tool_corpus`) — the MCP-registry-scale demo. Scaled row i
+    is a clone of base tool `i % bench.n_tools` (provenance by modulo).
+    """
     enc = BagEncoder(bench.vocab)
-    records = [
-        ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
-        for i in range(bench.n_tools)
-    ]
-    db = ToolsDatabase(records, enc.encode(bench.desc_tokens))
-    # offline control plane: fit the requested OATS stage, then swap the table
+    # offline control plane: fit the requested OATS stage, then deploy it
     pipe = OATSPipeline.fit(bench, PipelineConfig(stages=STAGE_PRESETS[stage], k=k), enc)
-    db.swap_table(pipe.tool_table)
+    if num_tools and num_tools < bench.n_tools:
+        raise SystemExit(
+            f"--num-tools {num_tools} is below the native table size "
+            f"({bench.n_tools}); the scaler only tiles up — "
+            f"use --n-tools for a smaller benchmark"
+        )
+    if num_tools and num_tools > bench.n_tools:
+        base_t = bench.n_tools
+        table = scale_tool_corpus(np.asarray(pipe.tool_table), num_tools, seed=seed)
+        records = [
+            ToolRecord(
+                i,
+                f"tool_{i % base_t}" + ("" if i < base_t else f"_clone{i // base_t}"),
+                bench.desc_tokens[i % base_t],
+                int(bench.tool_category[i % base_t]),
+            )
+            for i in range(num_tools)
+        ]
+        db = ToolsDatabase(records, table)  # refined table baked in at scale
+    else:
+        records = [
+            ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
+            for i in range(bench.n_tools)
+        ]
+        db = ToolsDatabase(records, enc.encode(bench.desc_tokens))
+        db.swap_table(pipe.tool_table)  # the §7.2 deploy step, exercised
     router = SemanticRouter(
         db,
         embed_fn=lambda toks: enc.encode_one(toks),
         embed_batch_fn=enc.encode,  # one encoder call per route_batch
         k=k,
+        backend=backend,
     )
+    # demo timing should reflect the index path, not the mid-build fallback
+    if not router.index.wait_ready(timeout_s=300.0):
+        print(
+            f"WARNING: {backend} index never became fresh "
+            f"(stats: {router.index.stats}); serving the exact dense fallback"
+        )
     return router, pipe
 
 
@@ -58,12 +98,21 @@ def main(argv=None):
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--n-tools", type=int, default=199)
     ap.add_argument("--n-queries", type=int, default=800)
+    ap.add_argument("--backend", default="dense", choices=("dense", "ivf", "pallas"),
+                    help="index scorer behind route_batch (repro.index)")
+    ap.add_argument("--num-tools", type=int, default=0,
+                    help="tile+perturb the tool table to this size "
+                         "(> --n-tools; 0 = no scaling) — the index-at-scale demo")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     print("== building tool benchmark + OATS control plane ==")
     bench = make_metatool_like(seed=args.seed, n_tools=args.n_tools, n_queries=args.n_queries)
-    router, _ = build_router(bench, args.stage)
+    router, _ = build_router(
+        bench, args.stage, backend=args.backend, num_tools=args.num_tools,
+        seed=args.seed,
+    )
+    print(f"== index backend: {args.backend} over {len(router.db)} tools ==")
 
     print("== loading backend pool ==")
     cfg = get_config(args.arch)
@@ -84,9 +133,10 @@ def main(argv=None):
     for lo in range(0, len(test), bs):
         chunk = test[lo : lo + bs]
         results.extend(router.route_batch([bench.query_tokens[q] for q in chunk]))
+    base_t = bench.n_tools  # scaled tool i is a clone of base tool i % base_t
     for qi, res in zip(test, results):
         lat.append(res.latency_ms)
-        hits += int(bench.relevant[qi][0] in res.tools)
+        hits += int(any(t % base_t == bench.relevant[qi][0] for t in res.tools))
         # 2) backend: prefill the (stub-tokenized) request + decode new tokens
         prompt_shape = (1, 32, cfg.n_codebooks) if cfg.n_codebooks else (1, 32)
         prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, prompt_shape), jnp.int32)
@@ -111,6 +161,7 @@ def main(argv=None):
         f"selection p50={stats.p50_ms:.2f}ms p99={stats.p99_ms:.2f}ms"
     )
     print(f"outcome log: {len(router.outcome_log)} events (feeds the next cron refinement)")
+    print(f"index stats: {router.index.stats}")
     return stats
 
 

@@ -22,14 +22,25 @@ lose an event. The control plane's `RefinementController` drains attached
 routers on every step.
 
 Serving is batch-first: `route_batch` embeds, scores, and top-Ks Q queries
-in ONE jitted `topk_dense` call (plus one batched `rerank_topk_scored` call
+in ONE batched scorer call (plus one batched `rerank_topk_scored` call
 when the Stage-2 MLP is enabled), amortizing dispatch overhead across the
 whole batch — the hot-path design the paper's single-digit-millisecond
 budget assumes at production traffic. `route` is the batch-of-1 special
 case and delegates, so batched and sequential serving are equivalent by
 construction. `RouteResult.scores` always holds the scores that produced
-the final ranking: cosine similarities on the dense path, f_phi MLP scores
-when the re-ranker reordered the candidates.
+the final ranking: exact similarities of the reported `table_version` on
+every backend's path, f_phi MLP scores when the re-ranker reordered the
+candidates.
+
+Scoring itself is pluggable (PR 3): the router delegates to a
+`repro.index.ToolIndexManager`, which serves the configured backend
+(`dense` exact matmul — the default, numerically the PR 1 path — `ivf`
+coarse-quantized candidates + exact re-rank for MCP-registry-scale tables,
+or `pallas` fused kernel on TPU) and falls back to exact dense scoring on
+the live snapshot whenever the index is stale (mid-rebuild after a
+control-plane `swap_table`/`rollback`) or the batch carries candidate masks
+the backend cannot honor. The swap/rollback protocol is untouched: scores
+and `table_version` always come from the same atomic snapshot.
 """
 from __future__ import annotations
 
@@ -44,7 +55,8 @@ import numpy as np
 
 from repro.core import reranker as reranker_lib
 from repro.core.features import OutcomeFeaturizer
-from repro.core.retrieval import NEG_INF, topk_dense
+from repro.core.retrieval import NEG_INF
+from repro.index import ToolIndexManager
 from repro.router.tooldb import ToolsDatabase
 
 __all__ = ["RouteResult", "OutcomeEvent", "SemanticRouter"]
@@ -82,6 +94,9 @@ class SemanticRouter:
         embed_batch_fn: Optional[Callable[[Sequence[np.ndarray]], np.ndarray]] = None,
         outcome_capacity: int = 65_536,
         outcome_sink: Optional[Callable[["OutcomeEvent"], None]] = None,
+        index: Optional[ToolIndexManager] = None,
+        backend: str = "dense",
+        backend_opts: Optional[dict] = None,
     ):
         self.db = db
         self.embed_fn = embed_fn
@@ -103,7 +118,25 @@ class SemanticRouter:
         self.outcomes_dropped = 0
         self.outcome_sink = outcome_sink
         self._outcome_lock = threading.Lock()
-        self._device_table = (-1, None)  # (table_version, jnp table)
+        # the scoring layer: a shared ToolIndexManager, or one owned by this
+        # router built from (backend, backend_opts) — "dense" is the PR 1
+        # jitted topk_dense path, numerics unchanged
+        self._owns_index = index is None
+        self.index = index if index is not None else ToolIndexManager(
+            db, backend=backend, backend_opts=backend_opts
+        )
+
+    def close(self) -> None:
+        """Tear down a retiring router (idempotent).
+
+        Unregisters the router-owned index manager from the database's swap
+        listeners — without this, a discarded router over a long-lived
+        ToolsDatabase keeps rebuilding its index (and pinning its table
+        copies) on every future swap. A shared manager passed via `index=`
+        is left alone: its lifecycle belongs to the caller.
+        """
+        if self._owns_index:
+            self.index.close()
 
     # ---------------------------------------------------------- serving path
     def _embed_batch(self, queries: Sequence[np.ndarray]) -> np.ndarray:
@@ -118,8 +151,9 @@ class SemanticRouter:
     ) -> List[RouteResult]:
         """Route Q queries in one batched scoring pass.
 
-        One `topk_dense` jit call scores the whole [Q, D] query block against
-        the [T, D] table (with optional per-query candidate masks); when the
+        One batched index call (the configured `ScorerBackend`; exact jitted
+        dense by default) scores the whole [Q, D] query block against the
+        [T, D] table (with optional per-query candidate masks); when the
         Stage-2 MLP is configured, featurization and `rerank_topk_scored`
         also run over the full batch. Returns one RouteResult per query, in
         input order; each carries the per-query amortized latency. A
@@ -131,16 +165,9 @@ class SemanticRouter:
         if n_q == 0:
             return []
         q = self._embed_batch(queries)  # [Q, D]
-        # atomic (version, table) snapshot — scoring and the reported
-        # table_version must come from the SAME table even if swap_table
-        # lands mid-batch; the device copy is refreshed only on version
-        # change, not per call (this is the hot path)
-        table_version, host_table = self.db.snapshot()
-        cached_version, table = self._device_table
-        if cached_version != table_version:
-            table = jnp.asarray(host_table)
-            self._device_table = (table_version, table)
-        n_t = table.shape[0]
+        # swap_table asserts the table shape is invariant, so the tool count
+        # is stable across versions and safe to read without a snapshot
+        n_t = len(self.db)
         rerank = self.mlp_params is not None and self.featurizer is not None
         c = min(self.k * self.candidate_multiplier, n_t) if rerank else min(self.k, n_t)
         k_eff = min(self.k, c)  # tables smaller than k yield short results
@@ -158,21 +185,24 @@ class SemanticRouter:
             )
         else:
             q_in, queries_in, masks_in = q, queries, candidate_masks
-        mask_j = None if masks_in is None else jnp.asarray(masks_in)
-        cand_scores, cand_idx = topk_dense(jnp.asarray(q_in), table, c, mask_j)
+        # the index layer scores the batch against an atomic (version, table)
+        # snapshot — the reported table_version and the scores come from the
+        # SAME table even if swap_table lands mid-batch, whichever backend
+        # (or the exact mid-rebuild fallback) served it
+        cand_scores_np, cand_idx_np, table_version = self.index.topk(
+            q_in, c, masks_in
+        )
         if rerank:
-            cand_idx_np = np.asarray(cand_idx)
-            cand_scores_np = np.asarray(cand_scores)
             feats = self.featurizer.features(q_in, queries_in, cand_idx_np, cand_scores_np)
             top_idx, top_scores = reranker_lib.rerank_topk_scored(
                 self.mlp_params,
                 jnp.asarray(feats),
-                cand_idx,
+                jnp.asarray(cand_idx_np),
                 k_eff,
                 valid=jnp.asarray(cand_scores_np > NEG_INF / 2),
             )
         else:
-            top_idx, top_scores = cand_idx[:, :k_eff], cand_scores[:, :k_eff]
+            top_idx, top_scores = cand_idx_np[:, :k_eff], cand_scores_np[:, :k_eff]
         top_idx = np.asarray(top_idx)[:n_q]
         top_scores = np.asarray(top_scores)[:n_q]
         latency_ms = (time.perf_counter() - t0) * 1e3 / n_q

@@ -17,7 +17,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 from collections import OrderedDict
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import numpy as np
 
@@ -53,6 +53,10 @@ class ToolsDatabase:
         self._history: "OrderedDict[int, np.ndarray]" = OrderedDict()
         self._history_limit = history_limit
         self._lock = threading.Lock()
+        # version-change listeners (repro.index.ToolIndexManager registers its
+        # rebuild trigger here); invoked AFTER the lock is released so a
+        # listener may call snapshot()/swap_table() without deadlocking
+        self._swap_listeners: List[Callable[[int], None]] = []
         self.table_version = 0
 
     def __len__(self) -> int:
@@ -79,6 +83,38 @@ class ToolsDatabase:
         """Versions currently available as rollback targets, oldest first."""
         with self._lock:
             return list(self._history.keys())
+
+    def add_swap_listener(self, fn: Callable[[int], None]) -> None:
+        """Register `fn(new_version)` to run after every swap/rollback.
+
+        The index layer uses this to kick async index rebuilds the moment a
+        new table deploys; the serving path keeps an exact fallback until the
+        rebuilt index lands, so listeners are fire-and-forget. Exceptions
+        raised by a listener are swallowed — a broken rebuild hook must never
+        turn a successful deployment into a failed one.
+
+        The database holds a strong reference until `remove_swap_listener`:
+        a retiring router/manager must unregister (`ToolIndexManager.close`)
+        or it keeps rebuilding — and keeps its table copies alive — on every
+        swap for the database's lifetime.
+        """
+        with self._lock:
+            self._swap_listeners.append(fn)
+
+    def remove_swap_listener(self, fn: Callable[[int], None]) -> None:
+        """Unregister a listener added by `add_swap_listener` (idempotent)."""
+        with self._lock:
+            try:
+                self._swap_listeners.remove(fn)
+            except ValueError:
+                pass
+
+    def _notify_swap(self, new_version: int) -> None:
+        for fn in list(self._swap_listeners):
+            try:
+                fn(new_version)
+            except Exception:
+                pass
 
     def swap_table(
         self, new_table: np.ndarray, expect_current: Optional[int] = None
@@ -107,7 +143,9 @@ class ToolsDatabase:
                 self._history.popitem(last=False)
             self._table = new_table.astype(np.float32)
             self.table_version += 1
-            return self.table_version
+            new_version = self.table_version
+        self._notify_swap(new_version)
+        return new_version
 
     def rollback(
         self, to_version: Optional[int] = None, expect_current: Optional[int] = None
@@ -145,4 +183,6 @@ class ToolsDatabase:
                 del self._history[v]
             self._table = table
             self.table_version += 1
-            return self.table_version
+            new_version = self.table_version
+        self._notify_swap(new_version)
+        return new_version

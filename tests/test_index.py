@@ -1,0 +1,301 @@
+"""Tool-index subsystem tests: backend protocol conformance, cross-backend
+consistency (exact backends identical, IVF Recall@5 floor), manager fallback
+semantics, and the acceptance scenario — a live `swap_table` during IVF
+serving routes correctly throughout (fallback-then-rebuild)."""
+import dataclasses
+import threading
+
+import numpy as np
+import pytest
+
+from repro.data.benchmarks import scale_tool_corpus
+from repro.embedding.bag_encoder import BagEncoder
+from repro.index import (
+    BACKENDS,
+    DenseBackend,
+    IVFBackend,
+    IVFConfig,
+    PallasBackend,
+    ToolIndexManager,
+    build_backend,
+)
+from repro.router.gateway import SemanticRouter
+from repro.router.tooldb import ToolRecord, ToolsDatabase
+
+SCALED_T = 3_000  # registry-scale-ish but fast to index in tests
+
+
+def _db_and_encoder(bench, table=None):
+    enc = BagEncoder(bench.vocab)
+    base = enc.encode(bench.desc_tokens) if table is None else table
+    n = base.shape[0]
+    records = [
+        ToolRecord(
+            i,
+            f"tool_{i % bench.n_tools}",
+            bench.desc_tokens[i % bench.n_tools],
+            int(bench.tool_category[i % bench.n_tools]),
+        )
+        for i in range(n)
+    ]
+    return ToolsDatabase(records, base), enc
+
+
+@pytest.fixture(scope="module")
+def scaled(small_bench):
+    """(table [3000, D], queries [48, D], encoder) — shared across tests."""
+    enc = BagEncoder(small_bench.vocab)
+    table = scale_tool_corpus(enc.encode(small_bench.desc_tokens), SCALED_T, seed=0)
+    queries = enc.encode(small_bench.query_tokens[:48])
+    return table, queries, enc
+
+
+# ------------------------------------------------------------------ backends
+def test_registry_and_protocol(scaled):
+    table, queries, _ = scaled
+    assert set(BACKENDS) == {"dense", "ivf", "pallas"}
+    for kind in BACKENDS:
+        b = build_backend(kind, table, table_version=7)
+        assert b.name == kind
+        assert b.table_version == 7
+        assert b.n_tools == SCALED_T
+        scores, idx = b.topk(queries, 5)
+        assert scores.shape == (len(queries), 5) and idx.shape == (len(queries), 5)
+        assert (np.diff(scores, axis=1) <= 1e-6).all()  # sorted descending
+        assert ((idx >= 0) & (idx < SCALED_T)).all()
+        empty_s, empty_i = b.topk(queries[:0], 5)  # contract: any Q, even 0
+        assert empty_s.shape == (0, 5) and empty_i.shape == (0, 5)
+    with pytest.raises(ValueError):
+        build_backend("flat", table, table_version=0)
+
+
+def test_exact_backends_identical_topk(scaled):
+    """dense and pallas (ref path on CPU) are both exact: identical top-K."""
+    table, queries, _ = scaled
+    sd, idd = DenseBackend(table, 0).topk(queries, 5)
+    sp, idp = PallasBackend(table, 0).topk(queries, 5)
+    assert (idd == idp).all()
+    np.testing.assert_allclose(sd, sp, atol=1e-6)
+
+
+def test_ivf_recall_floor_at_default_nprobe(scaled):
+    """Acceptance: IVF Recall@5 >= 0.98 vs exact at the default nprobe."""
+    table, queries, _ = scaled
+    _, exact = DenseBackend(table, 0).topk(queries, 5)
+    ivf = IVFBackend(table, 0)  # default IVFConfig
+    scores, approx = ivf.topk(queries, 5)
+    recall = np.mean([
+        len(set(exact[j]) & set(approx[j])) / 5 for j in range(len(queries))
+    ])
+    assert recall >= 0.98, f"IVF recall@5 {recall:.4f} below floor"
+    # the scores returned are EXACT similarities of the indexed table (the
+    # shortlist is int8-approximate, the final ranking is fp32 re-ranked)
+    for j in range(0, len(queries), 7):
+        np.testing.assert_allclose(
+            scores[j], table[approx[j]] @ queries[j], atol=1e-5
+        )
+
+
+def test_ivf_rejects_masks_and_tiny_tables_work(scaled):
+    table, queries, _ = scaled
+    ivf = IVFBackend(table, 0)
+    with pytest.raises(AssertionError):
+        ivf.topk(queries, 5, candidate_mask=np.ones((len(queries), SCALED_T)))
+    # below the quantizer's size floor: fp32 codes path, still correct
+    tiny = table[:40]
+    _, exact = DenseBackend(tiny, 0).topk(queries, 5)
+    _, approx = IVFBackend(tiny, 0, IVFConfig(nprobe=10)).topk(queries, 5)
+    recall = np.mean([
+        len(set(exact[j]) & set(approx[j])) / 5 for j in range(len(queries))
+    ])
+    assert recall >= 0.98
+
+
+# ------------------------------------------------------- cross-backend router
+def test_route_result_fields_consistent_across_backends(small_bench):
+    """Every backend's RouteResult carries the same fields; exact backends
+    agree on the ranking; scores always reproduce the final ranking."""
+    expected_fields = {"tools", "scores", "latency_ms", "pool", "table_version"}
+    per_backend = {}
+    for kind in BACKENDS:
+        db, enc = _db_and_encoder(small_bench)
+        router = SemanticRouter(
+            db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+            index=ToolIndexManager(db, backend=kind, async_rebuild=False),
+        )
+        results = router.route_batch(small_bench.query_tokens[:12])
+        for r in results:
+            assert {f.name for f in dataclasses.fields(r)} == expected_fields
+            assert r.table_version == db.table_version
+            assert r.scores == sorted(r.scores, reverse=True)
+            assert len(r.tools) == len(r.scores) == 5
+        per_backend[kind] = results
+        assert router.index.stats["served_index"] >= 1
+    for a, b in zip(per_backend["dense"], per_backend["pallas"]):
+        assert a.tools == b.tools  # both exact -> identical ranking
+    hits = [
+        len(set(a.tools) & set(b.tools))
+        for a, b in zip(per_backend["dense"], per_backend["ivf"])
+    ]
+    assert np.mean(hits) / 5 >= 0.98
+
+
+def test_masked_batches_fall_back_to_exact(small_bench):
+    db, enc = _db_and_encoder(small_bench)
+    manager = ToolIndexManager(db, backend="ivf", async_rebuild=False)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        index=manager,
+    )
+    mask = small_bench.candidate_mask()[:4]
+    results = router.route_batch(small_bench.query_tokens[:4], candidate_masks=mask)
+    assert manager.stats["served_exact"] >= 1
+    for j, r in enumerate(results):
+        allowed = set(np.flatnonzero(mask[j]).tolist())
+        assert set(r.tools) <= allowed  # exact masked path honors the subset
+
+
+# ------------------------------------------------------ swap-compat (manager)
+def test_swap_serves_exact_fallback_then_rebuilds(small_bench, scaled):
+    """Acceptance: a live swap_table during IVF serving routes correctly
+    throughout — the stale index is bypassed for the exact fallback on the
+    new snapshot, and the async rebuild restores index serving."""
+    table, queries_emb, _ = scaled
+    db, enc = _db_and_encoder(small_bench, table=table)
+    # watch_swaps=False isolates the lazy path: the swap must be detected by
+    # the serving call itself, not the eager listener
+    manager = ToolIndexManager(
+        db, backend="ivf", async_rebuild=True, watch_swaps=False,
+    )
+    assert manager.wait_ready(60.0)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        index=manager,
+    )
+    queries = small_bench.query_tokens[:8]
+    r0 = router.route_batch(queries)
+    assert all(r.table_version == 0 for r in r0)
+    assert manager.stats["served_index"] >= 1
+
+    perm = np.random.default_rng(0).permutation(SCALED_T)
+    db.swap_table(table[perm])
+    assert not manager.is_fresh()
+    exact_before = manager.stats["served_exact"]
+    r1 = router.route_batch(queries)  # index stale -> exact fallback + kick
+    assert all(r.table_version == 1 for r in r1)
+    assert manager.stats["served_exact"] == exact_before + 1
+    # fallback results are EXACT similarities of the NEW table
+    new_table = db.embeddings
+    for r, q in zip(r1, enc.encode(queries)):
+        np.testing.assert_allclose(
+            r.scores, (new_table[r.tools] @ q), atol=1e-4
+        )
+    assert manager.wait_ready(120.0), "async rebuild never landed"
+    served_idx_before = manager.stats["served_index"]
+    r2 = router.route_batch(queries)
+    assert all(r.table_version == 1 for r in r2)
+    assert manager.stats["served_index"] == served_idx_before + 1
+    assert manager.stats["rebuilds"] >= 2
+
+
+def test_swap_listener_triggers_rebuild_and_reports_version(small_bench, scaled):
+    """Default (watch_swaps=True): the ToolsDatabase listener rebuilds the
+    index on swap AND rollback; every batch's scores stay self-consistent
+    with the version it reports, even while swaps land concurrently."""
+    table, _, _ = scaled
+    db, enc = _db_and_encoder(small_bench, table=table)
+    manager = ToolIndexManager(
+        db, backend="ivf", async_rebuild=False,
+        backend_opts={"config": IVFConfig(kmeans_iters=2, train_sample=1500)},
+    )
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        index=manager,
+    )
+    tables = {0: table}
+    rng = np.random.default_rng(1)
+    stop = threading.Event()
+    swap_err = []
+
+    def churn():
+        try:
+            while not stop.is_set():
+                perm = rng.permutation(SCALED_T)
+                new = table[perm]
+                # register BEFORE the swap: the foreground can serve the new
+                # version while the sync listener rebuild is still inside
+                # swap_table (only this thread swaps, so +1 is the version)
+                tables[db.table_version + 1] = new
+                db.swap_table(new)
+        except Exception as exc:  # pragma: no cover
+            swap_err.append(exc)
+
+    thread = threading.Thread(target=churn, daemon=True)
+    thread.start()
+    try:
+        queries = small_bench.query_tokens[:6]
+        q_emb = enc.encode(queries)
+        for _ in range(6):
+            for r, q in zip(router.route_batch(queries), q_emb):
+                served_table = tables[r.table_version]
+                np.testing.assert_allclose(
+                    r.scores, served_table[r.tools] @ q, atol=1e-4
+                )
+    finally:
+        stop.set()
+        thread.join()
+    assert not swap_err
+    # rollback also fires the listener (sync build -> immediately fresh)
+    db.rollback()
+    assert manager.is_fresh()
+
+
+def test_close_unregisters_swap_listener(small_bench):
+    """A retired manager must stop rebuilding (and pinning table copies)
+    on future swaps — close() removes the database listener, idempotently."""
+    db, enc = _db_and_encoder(small_bench)
+    manager = ToolIndexManager(db, backend="dense", async_rebuild=False)
+    rebuilds_before = manager.stats["rebuilds"]
+    db.swap_table(np.roll(db.embeddings, 1, axis=0))
+    assert manager.stats["rebuilds"] == rebuilds_before + 1
+    manager.close()
+    manager.close()  # idempotent
+    db.swap_table(np.roll(db.embeddings, 2, axis=0))
+    assert manager.stats["rebuilds"] == rebuilds_before + 1  # no longer watching
+    assert not manager.is_fresh()
+    # a closed manager still serves correctly via the lazy path
+    _, _, version = manager.topk(enc.encode(small_bench.query_tokens[:2]), 5)
+    assert version == db.table_version
+    # router-level teardown: closes an owned manager, leaves a shared one
+    owned = SemanticRouter(db, embed_fn=enc.encode_one, k=5)
+    owned.close()
+    assert not owned.index._watching
+    shared = ToolIndexManager(db, backend="dense", async_rebuild=False)
+    SemanticRouter(db, embed_fn=enc.encode_one, k=5, index=shared).close()
+    assert shared._watching  # caller owns its lifecycle
+
+
+def test_misconfigured_backend_opts_fail_fast(small_bench):
+    """Bad backend_opts must raise at construction, not dissolve into a
+    silent build-failure loop behind the exact fallback."""
+    db, _ = _db_and_encoder(small_bench)
+    with pytest.raises(TypeError):
+        # IVFBackend takes config=IVFConfig(...), not raw kwargs
+        ToolIndexManager(db, backend="ivf", backend_opts={"nprobe": 16})
+
+
+def test_build_failure_keeps_fallback_serving(small_bench):
+    db, enc = _db_and_encoder(small_bench)
+    manager = ToolIndexManager(
+        db, backend="ivf", async_rebuild=False,
+        # nprobe fine, but an invalid cluster request must not kill serving
+        backend_opts={"config": IVFConfig(kmeans_iters=-1)},
+    )
+    # construction validated good opts; force a genuinely broken build next:
+    manager.backend_opts = {"config": "not-a-config"}
+    db.swap_table(np.roll(db.embeddings, 1, axis=0))
+    assert manager.stats["build_failures"] >= 1
+    scores, idx, version = manager.topk(enc.encode(small_bench.query_tokens[:3]), 5)
+    assert version == db.table_version
+    assert idx.shape == (3, 5)
+    assert manager.stats["served_exact"] >= 1

@@ -33,6 +33,48 @@ def test_topk_sim_shapes(q, t, d, k):
     assert (np.asarray(ri) == np.asarray(pi)).all()
 
 
+def test_topk_sim_tie_handling():
+    """Rows with BITWISE-tied scores spanning the BLOCK_T tile boundary:
+    kernel and ref must both resolve ties to the LOWEST index (the kernel's
+    stable merge sort keeps earlier-tile candidates ahead of later ones,
+    matching lax.top_k's tie order) — pinned before the Pallas path serves
+    traffic. One-hot table rows make every duplicate's dot product a single
+    float term, so ties are exact regardless of GEMM summation order
+    (duplicated *dense* rows can differ in the last ulp across column
+    blocks and would not actually tie)."""
+    d = 128
+    base = np.zeros((9, d), np.float32)
+    base[np.arange(9), np.arange(9)] = 1.0  # unit one-hot rows
+    te = np.tile(base, (70, 1))  # 630 rows: exact ties across 2 tiles
+    qe = _unit(RNG.normal(size=(4, d))).astype(np.float32)
+    rv, ri = topk_sim_ref(jnp.asarray(qe), jnp.asarray(te), 8)
+    pv, pi = topk_sim_pallas(jnp.asarray(qe), jnp.asarray(te), 8, interpret=True)
+    np.testing.assert_allclose(np.asarray(rv), np.asarray(pv), atol=1e-6)
+    assert (np.asarray(ri) == np.asarray(pi)).all()
+    # all 70 copies of each query's best one-hot row tie at the max score,
+    # so lowest-index-first tie order means the top-8 must be exactly the 8
+    # lowest-indexed copies of that row: best, best+9, ..., best+63
+    best = np.argmax(qe[:, :9], axis=1)  # score of one-hot row r is qe[:, r]
+    expected = best[:, None] + 9 * np.arange(8)[None, :]
+    np.testing.assert_array_equal(np.asarray(pi), expected)
+
+
+@pytest.mark.parametrize("t,k", [(513, 10), (37, 20), (512, 5)])
+def test_topk_sim_padded_tail_masking(t, k):
+    """T is padded up to a BLOCK_T multiple inside the kernel; the padded
+    tail must never surface as an index or a score. t=513 leaves a 511-row
+    padded tail in tile 2; t=37 leaves a 475-row tail in a single tile."""
+    qe = _unit(RNG.normal(size=(6, 384))).astype(np.float32)
+    te = _unit(RNG.normal(size=(t, 384))).astype(np.float32)
+    rv, ri = topk_sim_ref(jnp.asarray(qe), jnp.asarray(te), k)
+    pv, pi = topk_sim_pallas(jnp.asarray(qe), jnp.asarray(te), k, interpret=True)
+    pi, pv = np.asarray(pi), np.asarray(pv)
+    assert ((pi >= 0) & (pi < t)).all()  # no padded-row index leaks
+    assert (pv > -1e29).all()  # no NEG sentinel leaks (k <= t real rows)
+    np.testing.assert_allclose(np.asarray(rv), pv, atol=1e-5)
+    assert (np.asarray(ri) == pi).all()
+
+
 @given(st.integers(1, 40), st.integers(30, 200), st.integers(1, 8), st.integers(0, 99))
 @settings(max_examples=15, deadline=None)
 def test_topk_sim_property(q, t, k, seed):
