@@ -1,0 +1,298 @@
+"""Learning-plane benchmark: stage quality across outcome density + serving
+latency with every learned stage active.
+
+  PYTHONPATH=src python -m benchmarks.learn_bench [--smoke] [--out BENCH_learn.json]
+
+Two measurements, recorded into BENCH_learn.json:
+
+1. **Density sweep** (metatool-like, 600 tools, outcome volume varied at
+   fixed tool count): at each density point the streamed outcome window is
+   frozen (`build_train_window`) and three configurations are trained from
+   it and scored on the held-out test split — refine-only
+   (`refine_with_gate`, the §4.1 always-on stage), +adapter
+   (`AdapterTrainer`, query-side §4.3 head over the refined table), and
+   +reranker (`RerankerTrainer`, the §4.2 MLP). The sweep is the paper's
+   §7.3 table as measurement: the re-ranker's raw curve shows it *hurting*
+   in the sparse regime, which is exactly what `recommend_stages` (also
+   recorded per point) exists to prevent. A gated-promotion pass then
+   replays the LearningController's decision rule (plan veto + held-out
+   val gate) and the resulting config must not regress test NDCG@5 vs
+   refine-only — a regressing promotion fails CI here.
+
+2. **p99 route latency, all stages active** (toolbench-like, 2,413 tools):
+   batched `route_batch` with a StageSet carrying both the adapter head and
+   the MLP re-ranker, against the paper's 10 ms budget, next to the
+   stage-free baseline on the same router. Exceeding the budget fails CI.
+
+`scripts/ci_check.sh` smoke-runs this module via `benchmarks.run`.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+BUDGET_MS = 10.0
+REGRESSION_TOL = 0.02  # allowed test-NDCG slack for a gated promotion
+
+
+def _serve_and_log(router, bench, idx, batch_size=64):
+    for lo in range(0, len(idx), batch_size):
+        chunk = idx[lo : lo + batch_size]
+        results = router.route_batch([bench.query_tokens[qi] for qi in chunk])
+        for qi, res in zip(chunk, results):
+            for t in res.tools:
+                router.record_outcome(
+                    bench.query_tokens[qi], t, int(t in bench.relevant[qi])
+                )
+
+
+def bench_density_sweep(smoke: bool, seed: int) -> dict:
+    import jax.numpy as jnp
+
+    from repro.control import OutcomeStore
+    from repro.core.deployment import recommend_stages
+    from repro.core.refine import RefineConfig, refine_with_gate
+    from repro.data.benchmarks import make_metatool_like
+    from repro.embedding.bag_encoder import BagEncoder
+    from repro.learn import (
+        AdapterTrainer, RerankerTrainer, build_train_window, stage_ndcg,
+    )
+    from repro.router.gateway import SemanticRouter, StageSet
+    from repro.router.tooldb import ToolRecord, ToolsDatabase
+
+    n_tools = 600  # fixed tool count; >500 puts the adapter in-policy (§7.3)
+    # the densest point must clear the §7.3 adapter threshold (>10K logs =
+    # >2000 train queries at k=5) so the gated-promotion replay is exercised
+    # even in smoke mode
+    n_queries = 3000 if smoke else 4000
+    bench = make_metatool_like(seed=seed, n_tools=n_tools, n_queries=n_queries)
+    enc = BagEncoder(bench.vocab)
+    db = ToolsDatabase(
+        [ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
+         for i in range(bench.n_tools)],
+        enc.encode(bench.desc_tokens),
+    )
+    store = OutcomeStore(n_tools=len(db), capacity=200_000)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        outcome_sink=store.append,
+    )
+    test_idx = bench.test_idx[: 200 if smoke else 400]
+    test_q = enc.encode([bench.query_tokens[i] for i in test_idx])
+    test_tokens = [bench.query_tokens[i] for i in test_idx]
+    test_rel = bench.relevance_matrix()[test_idx]
+    refine_cfg = RefineConfig(keep_history=False, gate_metric="ndcg")
+
+    # cumulative traffic: each point adds queries, density grows at fixed T
+    fractions = (0.3, 1.0) if smoke else (0.2, 0.5, 1.0)
+    cut = [int(round(f * len(bench.train_idx))) for f in fractions]
+    points = []
+    served = 0
+    for hi in cut:
+        _serve_and_log(router, bench, bench.train_idx[served:hi])
+        served = hi
+        plan = recommend_stages(len(db), store.total_ingested)
+        window = build_train_window(db, store, enc.encode, min_queries=30, seed=seed)
+        assert window is not None, "sweep window unexpectedly too sparse"
+        # refine-only: the always-on Stage 1 from the same window
+        result = refine_with_gate(
+            jnp.asarray(window.table),
+            jnp.asarray(window.query_emb[window.train_idx]),
+            jnp.asarray(window.pos_mask[window.train_idx]),
+            jnp.asarray(window.query_emb[window.val_idx]),
+            jnp.asarray(window.pos_mask[window.val_idx]),
+            refine_cfg,
+        )
+        refined = np.asarray(result.embeddings)
+        window = dataclasses.replace(window, table=refined)
+        base = StageSet()
+        ndcg = {"refine_only": stage_ndcg(refined, test_q, test_tokens, test_rel, base)}
+        val_q = window.query_emb[window.val_idx]
+        val_tokens = window.tokens(window.val_idx)
+        val_rel = window.pos_mask[window.val_idx]
+        val_base = stage_ndcg(refined, val_q, val_tokens, val_rel, base)
+        trained = {}
+        for trainer in (AdapterTrainer(), RerankerTrainer()):
+            t0 = time.time()
+            try:
+                ts = trainer.train(window)
+            except ValueError as exc:  # window too sparse for this stage
+                ndcg[f"plus_{trainer.stage}"] = None
+                print(f"    {trainer.stage}: not trainable ({exc})", flush=True)
+                continue
+            candidate = ts.apply_to(base)
+            trained[trainer.stage] = (ts, candidate)
+            ndcg[f"plus_{trainer.stage}"] = stage_ndcg(
+                refined, test_q, test_tokens, test_rel, candidate
+            )
+            print(f"    {trainer.stage}: trained in {time.time() - t0:.1f}s "
+                  f"-> test NDCG@5 {ndcg[f'plus_{trainer.stage}']:.3f}", flush=True)
+        # gated promotion replay: the LearningController's decision rule —
+        # plan veto first, then the held-out val gate per stage
+        promoted = []
+        config = base
+        for stage, wanted in (
+            ("adapter", plan.contrastive_adapter), ("rerank", plan.mlp_reranker),
+        ):
+            if not wanted or stage not in trained:
+                continue
+            candidate = trained[stage][0].apply_to(config)
+            if stage_ndcg(refined, val_q, val_tokens, val_rel, candidate) > max(
+                val_base, stage_ndcg(refined, val_q, val_tokens, val_rel, config)
+            ):
+                config = candidate
+                promoted.append(stage)
+        ndcg_promoted = stage_ndcg(refined, test_q, test_tokens, test_rel, config)
+        point = {
+            "events": store.total_ingested,
+            "density": plan.density,
+            "plan": sorted(plan.stages),
+            "ndcg_at_5": ndcg,
+            "promoted": promoted,
+            "ndcg_promoted": ndcg_promoted,
+            "promotion_regressed": bool(
+                ndcg_promoted < ndcg["refine_only"] - REGRESSION_TOL
+            ),
+        }
+        points.append(point)
+        print(f"  density {plan.density:5.1f} ({store.total_ingested} events): "
+              f"refine {ndcg['refine_only']:.3f} | "
+              f"+adapter {ndcg.get('plus_adapter')} | "
+              f"+rerank {ndcg.get('plus_rerank')} | "
+              f"promoted {promoted or ['(none)']} -> {ndcg_promoted:.3f}",
+              flush=True)
+    return {
+        "table": bench.name,
+        "n_tools": n_tools,
+        "points": points,
+        "regression_tolerance": REGRESSION_TOL,
+    }
+
+
+def bench_latency_all_stages(smoke: bool, seed: int) -> dict:
+    import jax
+
+    from repro.core import adapter as adapter_lib
+    from repro.core import reranker as reranker_lib
+    from repro.core.features import OutcomeFeaturizer
+    from repro.data.benchmarks import make_toolbench_like
+    from repro.embedding.bag_encoder import BagEncoder
+    from repro.router.gateway import SemanticRouter, StageSet
+    from repro.router.latency import percentile_stats
+    from repro.router.tooldb import ToolRecord, ToolsDatabase
+
+    bench = make_toolbench_like(seed=seed, n_queries=128 if smoke else 600)
+    enc = BagEncoder(bench.vocab)
+    db = ToolsDatabase(
+        [ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
+         for i in range(bench.n_tools)],
+        enc.encode(bench.desc_tokens),
+    )
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5
+    )
+    queries = list(bench.query_tokens)
+    batch_size = 64
+    n_calls = 12 if smoke else 64
+
+    def timed_pass():
+        samples = []
+        for _ in range(2):  # warmup / compile
+            router.route_batch(queries[:batch_size])
+        for i in range(n_calls):
+            qs = [queries[(i * batch_size + j) % len(queries)]
+                  for j in range(batch_size)]
+            t0 = time.perf_counter()
+            router.route_batch(qs)
+            samples.append((time.perf_counter() - t0) * 1e3 / batch_size)
+        return percentile_stats(samples)
+
+    no_stages = timed_pass()
+
+    # all learned stages active: the adapter head (identical FLOPs whether
+    # trained or fresh) + the MLP re-ranker with a real featurizer fit on a
+    # slice of train traffic — the worst-case serving composition
+    fit_idx = bench.train_idx[:200]
+    fit_q = enc.encode([bench.query_tokens[i] for i in fit_idx])
+    rel = bench.relevance_matrix()[fit_idx]
+    retrieved = np.argsort(-(fit_q @ db.embeddings.T), axis=1)[:, :5]
+    featurizer = OutcomeFeaturizer.fit(
+        fit_q, [bench.query_tokens[i] for i in fit_idx], rel, retrieved,
+        bench.tool_category, seed=seed,
+    )
+    key = jax.random.PRNGKey(seed)
+    router.set_stages(StageSet(
+        adapter_params=adapter_lib.init_adapter(key),
+        mlp_params=reranker_lib.init_mlp(key),
+        featurizer=featurizer,
+    ))
+    all_stages = timed_pass()
+    return {
+        "table": bench.name,
+        "n_tools": bench.n_tools,
+        "batch_size": batch_size,
+        "n_calls": n_calls,
+        "no_stages": no_stages.as_dict(),
+        "all_stages": all_stages.as_dict(),
+        "budget_ms": BUDGET_MS,
+    }
+
+
+def run(smoke: bool = False, seed: int = 0, out: str = "BENCH_learn.json") -> dict:
+    if os.path.dirname(out):
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+    print("[1/2] NDCG@5 density sweep (refine-only / +adapter / +reranker)",
+          flush=True)
+    sweep = bench_density_sweep(smoke, seed)
+    print("[2/2] route_batch p99 with all learned stages active", flush=True)
+    latency = bench_latency_all_stages(smoke, seed)
+    p99 = latency["all_stages"]["p99_ms"]
+    regressed = [p for p in sweep["points"] if p["promotion_regressed"]]
+    report = {
+        "bench": "learning_plane",
+        "density_sweep": sweep,
+        "latency_all_stages": latency,
+        "derived": {
+            "p99_all_stages_ms": p99,
+            "p99_within_budget": p99 <= BUDGET_MS,
+            "n_promotion_regressions": len(regressed),
+        },
+        "smoke": smoke,
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    dense = sweep["points"][-1]
+    print(f"densest point ({dense['density']:.1f} ev/tool): refine-only "
+          f"{dense['ndcg_at_5']['refine_only']:.3f} vs promoted "
+          f"{dense['ndcg_promoted']:.3f} {dense['promoted']} | p99/query "
+          f"all stages {p99:.3f}ms (budget {BUDGET_MS}ms, stage-free "
+          f"{latency['no_stages']['p99_ms']:.3f}ms) -> {out}")
+    if regressed:
+        raise SystemExit(
+            f"{len(regressed)} gated promotion(s) regressed held-out NDCG@5 "
+            f"past {REGRESSION_TOL}: {regressed}"
+        )
+    if not report["derived"]["p99_within_budget"]:
+        raise SystemExit(
+            f"p99 with all stages active {p99:.3f}ms exceeds the "
+            f"{BUDGET_MS}ms budget"
+        )
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced scale for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_learn.json")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, seed=args.seed, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,7 +7,7 @@ Two kinds of benchmark live behind one registry and ONE `--smoke` flag:
 
   * paper tables (`benchmarks.tables.ALL_TABLES` + roofline/kernels) print
     ``name,us_per_call,derived`` CSV rows to stdout;
-  * subsystem suites (`router`, `control`, `index`) are the recorded-number
+  * subsystem suites (`router`, `control`, `index`, `learn`) are the recorded-number
     benches — each writes its own ``BENCH_<name>[_smoke].json`` artifact and
     prints its own summary. They are the same entry points CI smoke-runs
     (`scripts/ci_check.sh`), so `--smoke` means the same reduced scale
@@ -26,12 +26,13 @@ import time
 
 def _suite_registry():
     """name -> run(smoke=..., seed=..., out=...) for the subsystem benches."""
-    from benchmarks import control_bench, index_bench, router_bench
+    from benchmarks import control_bench, index_bench, learn_bench, router_bench
 
     return {
         "router": router_bench.run,
         "control": control_bench.run,
         "index": index_bench.run,
+        "learn": learn_bench.run,
     }
 
 
@@ -43,7 +44,7 @@ def main(argv=None) -> None:
                     help="deprecated alias for --smoke")
     ap.add_argument("--tables", default="all",
                     help="comma list of paper tables and/or suites "
-                         "(router,control,index)")
+                         "(router,control,index,learn)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     smoke = args.smoke or args.fast

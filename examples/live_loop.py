@@ -1,4 +1,7 @@
-"""The online control plane end-to-end (paper §7.2 as a running subsystem):
+"""The online control + learning planes end-to-end (paper §7.2-7.3 as
+running subsystems).
+
+Default mode — the §7.2 refinement loop (PR 2):
 
     serve -> outcome sink -> OutcomeStore -> RefinementController trigger ->
     refine_with_gate -> atomic swap -> TableGuard shadow monitoring ->
@@ -6,16 +9,33 @@
 
   PYTHONPATH=src python examples/live_loop.py
 
-Unlike examples/refine_loop.py (which wires refine_with_gate to the router
-by hand, cron-style), everything here flows through `repro.control`: the
-router pushes every outcome straight into the store, the controller decides
-when to refine and swaps accepted tables while traffic keeps flowing, and
-the guard watches rolling NDCG@5 per table version on labelled traffic.
+`--stages` mode — the §7.3 learning plane (PR 4): density-gated training,
+promotion, and demotion of the *learned* stages against the live router:
 
-Act 2 injects a corrupted table *bypassing the validation gate* (the
-failure shadow monitoring exists for) and shows the guard condemning and
-rolling it back automatically.
+    serve (sparse window)  -> LearningController: adapter AND re-ranker
+                              suppressed by the recommend_stages density plan
+    serve (dense window)   -> adapter trained from the outcome window,
+                              held-out NDCG@5 gate passed, activated via
+                              compare-and-swap StageSet promotion (asserted
+                              NDCG lift); the re-ranker stays suppressed —
+                              the paper's sparse-regime negative result as
+                              live behavior
+    inject corrupted stage -> StageGuard shadow monitoring condemns it on
+                              labelled traffic and auto-demotes back to the
+                              good StageSet
+
+  PYTHONPATH=src python examples/live_loop.py --stages
+
+Unlike examples/refine_loop.py (which wires refine_with_gate to the router
+by hand, cron-style), everything here flows through `repro.control` /
+`repro.learn`: the router pushes every outcome straight into the store, the
+controllers decide when to refine/train and deploy gated artifacts while
+traffic keeps flowing, and the guards watch rolling NDCG@5 per version on
+labelled traffic.
 """
+import argparse
+import dataclasses
+
 import numpy as np
 
 from repro.control import (
@@ -27,31 +47,28 @@ from repro.control import (
 )
 from repro.data.benchmarks import make_metatool_like
 from repro.embedding.bag_encoder import BagEncoder
+from repro.metrics.retrieval import ndcg_at_k
 from repro.router.gateway import SemanticRouter
 from repro.router.tooldb import ToolRecord, ToolsDatabase
 
-bench = make_metatool_like(n_tools=199, n_queries=2400)
-enc = BagEncoder(bench.vocab)
-db = ToolsDatabase(
-    [ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
-     for i in range(bench.n_tools)],
-    enc.encode(bench.desc_tokens),
-)
-store = OutcomeStore(n_tools=len(db), capacity=100_000)
-router = SemanticRouter(
-    db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
-    outcome_sink=store.append,  # every outcome goes straight to the store
-)
-guard = TableGuard(db, GuardConfig(k=5, min_samples=64, tolerance=0.02))
-controller = RefinementController(
-    db, store, enc.encode, routers=[router],
-    config=ControllerConfig(min_events=1500, min_queries=50),
-    guard=guard,
-)
+
+def build_serving_plane(bench, store_capacity=100_000):
+    enc = BagEncoder(bench.vocab)
+    db = ToolsDatabase(
+        [ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
+         for i in range(bench.n_tools)],
+        enc.encode(bench.desc_tokens),
+    )
+    store = OutcomeStore(n_tools=len(db), capacity=store_capacity)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        outcome_sink=store.append,  # every outcome goes straight to the store
+    )
+    return enc, db, store, router
 
 
-def serve_window(idx, batch_size=64):
-    """Route a traffic window batch-first; log outcomes + guard labels."""
+def serve_window(bench, router, idx, observe=None, batch_size=64):
+    """Route a traffic window batch-first; log outcomes (+ guard labels)."""
     for lo in range(0, len(idx), batch_size):
         chunk = idx[lo : lo + batch_size]
         results = router.route_batch([bench.query_tokens[qi] for qi in chunk])
@@ -60,12 +77,11 @@ def serve_window(idx, batch_size=64):
                 router.record_outcome(
                     bench.query_tokens[qi], t, int(t in bench.relevant[qi])
                 )
-            guard.observe(res.table_version, res.tools, bench.relevant[qi])
+            if observe is not None:
+                observe(res, bench.relevant[qi])
 
 
-def heldout_ndcg(n=300):
-    from repro.metrics.retrieval import ndcg_at_k
-
+def heldout_ndcg(bench, router, n=300):
     idx = bench.test_idx[:n]
     results = router.route_batch([bench.query_tokens[qi] for qi in idx])
     return float(np.mean([
@@ -73,52 +89,181 @@ def heldout_ndcg(n=300):
     ]))
 
 
-print(f"act 1 — streamed outcomes close the refinement loop "
-      f"({bench.n_tools} tools, {len(bench.train_idx)} train queries)")
-ndcg_static = heldout_ndcg()
-print(f"  window 0 (static table v0): heldout NDCG@5 = {ndcg_static:.3f}")
-windows = np.array_split(bench.train_idx, 4)
-for w, idx in enumerate(windows, 1):
-    serve_window(idx)
-    report = controller.step()
-    print(f"  window {w}: {report.n_events} events in store "
-          f"({report.n_queries} unique queries), "
-          f"{'SWAP' if report.swapped else 'no swap'} -> table v{report.table_version}"
-          f" | {report.reason}")
-    print(f"            heldout NDCG@5 = {heldout_ndcg():.3f}")
+# --------------------------------------------------------------- §7.2 (PR 2)
+def run_refine_demo():
+    bench = make_metatool_like(n_tools=199, n_queries=2400)
+    enc, db, store, router = build_serving_plane(bench)
+    guard = TableGuard(db, GuardConfig(k=5, min_samples=64, tolerance=0.02))
+    controller = RefinementController(
+        db, store, enc.encode, routers=[router],
+        config=ControllerConfig(min_events=1500, min_queries=50),
+        guard=guard,
+    )
 
-v_good = db.table_version
-ndcg_good = heldout_ndcg()
-assert v_good > 0, "expected at least one accepted swap in act 1"
-assert ndcg_good > ndcg_static, (
-    f"accepted swaps did not improve heldout NDCG@5 "
-    f"({ndcg_static:.3f} -> {ndcg_good:.3f})"
-)
-# serve labelled traffic on the final good table so the guard has a frozen
-# baseline window for it before anything replaces it
-serve_window(bench.test_idx[:300])
+    def observe(res, relevant):
+        guard.observe(res.table_version, res.tools, relevant)
 
-print("\nact 2 — a corrupted table bypasses the gate; the guard rolls it back")
-rng = np.random.default_rng(0)
-bad = db.embeddings.copy()
-rng.shuffle(bad, axis=0)  # tool vectors scrambled across tools
-db.swap_table(bad)
-print(f"  injected bad table: v{db.table_version} "
-      f"(heldout NDCG@5 = {heldout_ndcg():.3f})")
-for w, idx in enumerate(np.array_split(bench.test_idx, 3), 1):
-    serve_window(idx)
-    report = controller.step()
-    g = report.guard
-    print(f"  shadow window {w}: guard={g.action} "
-          f"(ndcg={g.ndcg if g.ndcg is None else round(g.ndcg, 3)}, "
-          f"baseline={g.baseline if g.baseline is None else round(g.baseline, 3)}, "
-          f"n={g.n_samples}) -> table v{db.table_version}")
-    if g.action == "rolled_back":
-        break
+    print(f"act 1 — streamed outcomes close the refinement loop "
+          f"({bench.n_tools} tools, {len(bench.train_idx)} train queries)")
+    ndcg_static = heldout_ndcg(bench, router)
+    print(f"  window 0 (static table v0): heldout NDCG@5 = {ndcg_static:.3f}")
+    windows = np.array_split(bench.train_idx, 4)
+    for w, idx in enumerate(windows, 1):
+        serve_window(bench, router, idx, observe)
+        report = controller.step()
+        print(f"  window {w}: {report.n_events} events in store "
+              f"({report.n_queries} unique queries), "
+              f"{'SWAP' if report.swapped else 'no swap'} -> table v{report.table_version}"
+              f" | {report.reason}")
+        print(f"            heldout NDCG@5 = {heldout_ndcg(bench, router):.3f}")
 
-assert guard.rollbacks, "guard failed to roll back the corrupted table"
-restored = heldout_ndcg()
-print(f"  restored table v{db.table_version}: heldout NDCG@5 = {restored:.3f} "
-      f"(good table was {ndcg_good:.3f})")
-assert abs(restored - ndcg_good) < 1e-6, "rollback did not restore the good table"
-print("\nloop closed: outcomes -> refine -> validate -> swap -> monitor -> rollback")
+    v_good = db.table_version
+    ndcg_good = heldout_ndcg(bench, router)
+    assert v_good > 0, "expected at least one accepted swap in act 1"
+    assert ndcg_good > ndcg_static, (
+        f"accepted swaps did not improve heldout NDCG@5 "
+        f"({ndcg_static:.3f} -> {ndcg_good:.3f})"
+    )
+    # serve labelled traffic on the final good table so the guard has a frozen
+    # baseline window for it before anything replaces it
+    serve_window(bench, router, bench.test_idx[:300], observe)
+
+    print("\nact 2 — a corrupted table bypasses the gate; the guard rolls it back")
+    rng = np.random.default_rng(0)
+    bad = db.embeddings.copy()
+    rng.shuffle(bad, axis=0)  # tool vectors scrambled across tools
+    db.swap_table(bad)
+    print(f"  injected bad table: v{db.table_version} "
+          f"(heldout NDCG@5 = {heldout_ndcg(bench, router):.3f})")
+    for w, idx in enumerate(np.array_split(bench.test_idx, 3), 1):
+        serve_window(bench, router, idx, observe)
+        report = controller.step()
+        g = report.guard
+        print(f"  shadow window {w}: guard={g.action} "
+              f"(ndcg={g.ndcg if g.ndcg is None else round(g.ndcg, 3)}, "
+              f"baseline={g.baseline if g.baseline is None else round(g.baseline, 3)}, "
+              f"n={g.n_samples}) -> table v{db.table_version}")
+        if g.action == "rolled_back":
+            break
+
+    assert guard.rollbacks, "guard failed to roll back the corrupted table"
+    restored = heldout_ndcg(bench, router)
+    print(f"  restored table v{db.table_version}: heldout NDCG@5 = {restored:.3f} "
+          f"(good table was {ndcg_good:.3f})")
+    assert abs(restored - ndcg_good) < 1e-6, "rollback did not restore the good table"
+    print("\nloop closed: outcomes -> refine -> validate -> swap -> monitor -> rollback")
+
+
+# --------------------------------------------------------------- §7.3 (PR 4)
+def run_stages_demo():
+    import jax.numpy as jnp
+
+    from repro.learn import (
+        ArtifactRegistry,
+        LearnConfig,
+        LearningController,
+        StageGuard,
+        StageGuardConfig,
+    )
+
+    # 600 tools puts the adapter in-policy once logs exceed 10K (§7.3), and
+    # keeps the re-ranker out-of-policy at every density (|T| > 500)
+    bench = make_metatool_like(n_tools=600, n_queries=4000)
+    enc, db, store, router = build_serving_plane(bench)
+    stage_guard = StageGuard(router, StageGuardConfig(k=5, min_samples=64))
+    registry = ArtifactRegistry()
+    learner = LearningController(
+        db, store, router, enc.encode,
+        registry=registry, guard=stage_guard,
+        config=LearnConfig(min_new_events=1000),
+    )
+
+    def observe(res, relevant):
+        stage_guard.observe(res.stage_version, res.tools, relevant)
+
+    def show(report):
+        for stage, d in sorted(report.decisions.items()):
+            print(f"    {stage:8s}: {d.action:14s} {d.reason}")
+        print(f"    live stages: {sorted(report.active) or '(none)'} "
+              f"(stage v{report.stage_version}, density "
+              f"{report.density:.1f} ev/tool)")
+
+    print(f"act 1 — sparse window: the density plan suppresses both learned "
+          f"stages ({bench.n_tools} tools)")
+    sparse = bench.train_idx[:600]  # ~3K events: density ~5, logs < 10K
+    serve_window(bench, router, sparse)
+    report = learner.step()
+    show(report)
+    assert report.decisions["adapter"].action == "suppressed"
+    assert report.decisions["rerank"].action == "suppressed"
+    assert report.active == frozenset(), "nothing may deploy from a sparse window"
+
+    print("\nact 2 — dense window: the adapter clears the plan AND the "
+          "held-out gate; the re-ranker stays suppressed")
+    ndcg_sparse = heldout_ndcg(bench, router)
+    print(f"  before promotion: heldout NDCG@5 = {ndcg_sparse:.3f}")
+    serve_window(bench, router, bench.train_idx[600:])  # > 10K total events
+    report = learner.step()
+    show(report)
+    d = report.decisions["adapter"]
+    assert d.action == "promoted", f"expected adapter promotion, got {d}"
+    assert d.ndcg_candidate > d.ndcg_current, "gate accepted a non-improvement"
+    assert report.decisions["rerank"].action == "suppressed", (
+        "the re-ranker must never deploy while out of policy (§7.3)"
+    )
+    assert report.active == frozenset({"adapter"})
+    art = registry.latest("adapter")
+    print(f"  artifact adapter/v{art.version}: trained on table "
+          f"v{art.table_version}, window {art.fingerprint}")
+    ndcg_dense = heldout_ndcg(bench, router)
+    print(f"  after promotion:  heldout NDCG@5 = {ndcg_dense:.3f}")
+    assert ndcg_dense > ndcg_sparse, (
+        f"promoted adapter did not lift heldout NDCG@5 "
+        f"({ndcg_sparse:.3f} -> {ndcg_dense:.3f})"
+    )
+    # labelled traffic on the promoted stage set gives the guard a rolling
+    # window to freeze as the NEXT version's baseline
+    serve_window(bench, router, bench.test_idx[:300], observe)
+
+    print("\nact 3 — a corrupted adapter bypasses the gate; the StageGuard "
+          "demotes it")
+    _, good = router.stage_set()
+    rng = np.random.default_rng(0)
+    bad_params = {
+        k: jnp.asarray(rng.normal(scale=0.5, size=v.shape), jnp.float32)
+        for k, v in good.adapter_params.items()
+    }
+    router.set_stages(dataclasses.replace(good, adapter_params=bad_params))
+    print(f"  injected corrupted adapter: stage v{router.stage_version} "
+          f"(heldout NDCG@5 = {heldout_ndcg(bench, router):.3f})")
+    for w, idx in enumerate(np.array_split(bench.test_idx, 3), 1):
+        serve_window(bench, router, idx, observe)
+        report = learner.step()
+        g = report.guard
+        print(f"  shadow window {w}: guard={g.action} "
+              f"(ndcg={g.ndcg if g.ndcg is None else round(g.ndcg, 3)}, "
+              f"baseline={g.baseline if g.baseline is None else round(g.baseline, 3)}, "
+              f"n={g.n_samples}) -> stage v{router.stage_version}")
+        if g.action == "demoted":
+            break
+    assert stage_guard.demotions, "guard failed to demote the corrupted stage set"
+    _, live = router.stage_set()
+    assert live.adapter_artifact == art.version, (
+        "demotion did not restore the gated adapter artifact"
+    )
+    restored = heldout_ndcg(bench, router)
+    print(f"  restored stage v{router.stage_version}: heldout NDCG@5 = "
+          f"{restored:.3f} (good stage set was {ndcg_dense:.3f})")
+    assert abs(restored - ndcg_dense) < 1e-6, "demotion did not restore serving"
+    print("\nloop closed: outcomes -> density plan -> train -> gate -> "
+          "promote -> monitor -> demote")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--stages", action="store_true",
+                    help="run the PR 4 learning-plane demo (density-gated "
+                         "promotion of adapter/re-ranker) instead of the "
+                         "PR 2 refinement-loop demo")
+    args = ap.parse_args()
+    run_stages_demo() if args.stages else run_refine_demo()

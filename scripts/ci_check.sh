@@ -14,6 +14,10 @@
 # — or a p99 past the 10 ms budget — fails CI here. index_bench smoke-runs
 # the backend matrix at the 25k-tool scale and fails CI if the IVF p99/query
 # exceeds the 10 ms budget (or its Recall@5 vs exact drops below 0.98).
+# learn_bench runs the learning plane's density sweep + all-stages serving
+# latency and fails CI on a route_batch p99 past the 10 ms budget with every
+# learned stage active, or on a gated promotion that regresses held-out
+# NDCG@5.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -26,3 +30,5 @@ python -m benchmarks.router_bench --smoke --out BENCH_router_smoke.json
 python -m benchmarks.control_bench --smoke --out BENCH_control_smoke.json
 
 python -m benchmarks.index_bench --smoke --out BENCH_index_smoke.json
+
+python -m benchmarks.learn_bench --smoke --out BENCH_learn_smoke.json

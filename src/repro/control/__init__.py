@@ -10,6 +10,10 @@ router, with no changes to the serving path:
   * `TableGuard` — post-swap shadow monitoring on labelled traffic;
     auto-rolls-back a regressing table through the ToolsDatabase version
     history.
+
+The learned stages (adapter/re-ranker) are owned by the sibling learning
+plane (`repro.learn`), which consumes this package's OutcomeStore window
+and the `recommend_stages` density plan recorded on controller reports.
 """
 from repro.control.controller import (
     ControllerConfig,

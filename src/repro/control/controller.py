@@ -17,9 +17,11 @@ Triggering is `core.deployment.refine_trigger` (event-count OR staleness).
 Each triggered step also computes `core.deployment.recommend_stages` over
 the store's live per-tool counters and records the plan on its report:
 refinement itself is always-on in that policy (zero serving cost,
-gate-protected, §7.2), while the plan's density thresholds are what would
-gate training of the learned stages (rerank/adapter) if the controller
-grows them — it never trains serving-path models mid-flight today.
+gate-protected, §7.2), while the plan's density thresholds gate training of
+the learned stages (rerank/adapter) — acted on by the learning plane
+(`repro.learn.LearningController`), which runs beside this controller over
+the same OutcomeStore and deploys gated StageSets to the router. This
+controller itself never trains serving-path models mid-flight.
 
 The validation slice is a deterministic per-refinement split of the *unique
 queries* in the window (not of raw events: a query's K outcome events must
@@ -181,9 +183,9 @@ class RefinementController:
         n_examples = int(pos_counts.sum() + neg_counts.sum())
         # §7.2/§7.3 stage plan over the live counters. Refinement itself is
         # always-on in that policy (zero serving cost, gate-protected), so
-        # the plan doesn't veto this step; it is recorded on the report and
-        # is what would gate training of learned stages (rerank/adapter) if
-        # the controller grows them.
+        # the plan doesn't veto this step; it is recorded on the report, and
+        # the same policy gates learned-stage training in the learning plane
+        # (repro.learn reads these thresholds over the same counters).
         plan = recommend_stages(len(self.db), n_examples)
         base = ControllerReport(
             triggered=True,

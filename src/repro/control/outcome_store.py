@@ -26,6 +26,7 @@ survives controller restarts.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import threading
 from collections import deque
 from typing import Callable, Deque, Dict, Iterable, List, Optional, Sequence, Tuple
@@ -48,6 +49,11 @@ class RefinementBatch:
     pos_mask: np.ndarray  # [Q, T] observed successes (= relevance labels)
     neg_mask: np.ndarray  # [Q, T] observed failures (pos vetoes neg)
     n_events: int  # events folded into the masks
+    # fingerprint of the EXACT window snapshot these inputs were built from,
+    # taken under the same lock acquisition — an append racing the build
+    # cannot desynchronize the two (the learning plane stamps artifacts
+    # with it for attributability)
+    fingerprint: str = ""
 
     @property
     def n_queries(self) -> int:
@@ -137,6 +143,27 @@ class OutcomeStore:
         with self._lock:
             return list(self._events)
 
+    def _fingerprint_locked(self) -> str:
+        h = hashlib.sha1()
+        h.update(np.int64(self.total_ingested).tobytes())
+        h.update(np.int64(len(self._events)).tobytes())
+        h.update(self._pos_counts.tobytes())
+        h.update(self._neg_counts.tobytes())
+        return h.hexdigest()[:16]
+
+    def window_fingerprint(self) -> str:
+        """Content hash of the current evidence window.
+
+        The learning plane stamps every trained artifact with this (plus the
+        table version), so a deployed StageSet is attributable to the exact
+        window it was trained from. Built from the watermark + window size +
+        per-tool counters: O(T), no ring scan, and any ingest/evict/clear
+        changes it. For a fingerprint guaranteed to match a training batch,
+        use `RefinementBatch.fingerprint` (same lock acquisition as the
+        event snapshot it hashes)."""
+        with self._lock:
+            return self._fingerprint_locked()
+
     def build_refinement_batch(
         self,
         embed_batch_fn: Callable[[Sequence[np.ndarray]], np.ndarray],
@@ -146,9 +173,13 @@ class OutcomeStore:
         Deduplicates queries by token content (a query served K tools yields
         K events but one row), embeds the unique queries in one
         `embed_batch_fn` call, and folds every event into pos/neg masks via
-        `masks_from_stream` (positives veto negatives on conflict).
+        `masks_from_stream` (positives veto negatives on conflict). The
+        returned batch carries the window fingerprint taken atomically with
+        the event snapshot.
         """
-        events = self.snapshot_events()
+        with self._lock:
+            events = list(self._events)
+            fingerprint = self._fingerprint_locked()
         keys: Dict[Tuple[int, bytes], int] = {}
         uniq_tokens: List[np.ndarray] = []
         qids = np.empty(len(events), dtype=np.int64)
@@ -176,6 +207,7 @@ class OutcomeStore:
             pos_mask=pos,
             neg_mask=neg,
             n_events=len(events),
+            fingerprint=fingerprint,
         )
 
     # ---------------------------------------------------------- persistence

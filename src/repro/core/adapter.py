@@ -46,6 +46,12 @@ class AdapterConfig:
     seed: int = 0
     # beyond-paper knob: scale the residual branch during warmup
     residual_scale: float = 1.0
+    # adapt_tools=True is the paper's symmetric deployment: h() applied to
+    # both sides, tool embeddings recomputed once at deploy time. The online
+    # learning plane trains with adapt_tools=False — h() on queries only,
+    # tool table frozen — so a promoted adapter is a pure query-side hot
+    # swap: no table swap, no index rebuild, instant rollback.
+    adapt_tools: bool = True
 
 
 def init_adapter(key: jax.Array) -> dict:
@@ -109,16 +115,20 @@ def mine_triplets(
     )
 
 
-def _info_nce(params, q, pos, negs, temperature, scale):
+def _info_nce(params, q, pos, negs, temperature, scale, adapt_tools=True):
     """InfoNCE (Eq. 6) with in-batch + mined hard negatives.
 
-    q: [B, D]; pos: [B, D]; negs: [B, H, D].
+    q: [B, D]; pos: [B, D]; negs: [B, H, D]. With `adapt_tools=False` the
+    tool-side embeddings pass through unadapted (query-side-only training).
     """
     qa = adapter_apply(params, q, scale)
-    pa = adapter_apply(params, pos, scale)
-    na = adapter_apply(params, negs.reshape(-1, negs.shape[-1]), scale).reshape(
-        negs.shape
-    )
+    if adapt_tools:
+        pa = adapter_apply(params, pos, scale)
+        na = adapter_apply(params, negs.reshape(-1, negs.shape[-1]), scale).reshape(
+            negs.shape
+        )
+    else:
+        pa, na = pos, negs
     pos_logit = (qa * pa).sum(-1, keepdims=True)  # [B, 1]
     inbatch = qa @ pa.T  # [B, B] — off-diagonal are in-batch negatives
     mask = jnp.eye(qa.shape[0], dtype=bool)
@@ -155,7 +165,8 @@ def train_adapter(
     @jax.jit
     def step(params, opt_state, qb, pb, nb):
         loss, grads = jax.value_and_grad(_info_nce)(
-            params, qb, pb, nb, config.temperature, config.residual_scale
+            params, qb, pb, nb, config.temperature, config.residual_scale,
+            config.adapt_tools,
         )
         updates, opt_state = opt.update(grads, opt_state, params)
         return optim.apply_updates(params, updates), opt_state, loss
@@ -163,7 +174,7 @@ def train_adapter(
     @jax.jit
     def val_ndcg(params):
         qa = adapter_apply(params, vqe, config.residual_scale)
-        ta = adapter_apply(params, te, config.residual_scale)
+        ta = adapter_apply(params, te, config.residual_scale) if config.adapt_tools else te
         sims = qa @ ta.T
         if vmask is not None:
             sims = jnp.where(vmask > 0, sims, -1e30)

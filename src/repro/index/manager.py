@@ -177,10 +177,18 @@ class ToolIndexManager:
             ).start()
 
     def _build(self, version: int, table: np.ndarray) -> None:
+        opts = dict(self.backend_opts)
+        with self._lock:
+            prev = self._backend
+        if prev is not None and hasattr(prev, "warm_start_state"):
+            # swap-triggered rebuild: seed the new build from the outgoing
+            # index's state (IVF k-means centroids). Control-plane swaps
+            # move the table gently, so the warm start converges in a
+            # fraction of the iterations; a stale/incompatible state is
+            # validated and ignored by the backend, never an error.
+            opts["warm_start"] = prev.warm_start_state()
         try:
-            backend = _build_backend(
-                self.backend_kind, table, version, **self.backend_opts
-            )
+            backend = _build_backend(self.backend_kind, table, version, **opts)
         except Exception:
             with self._lock:
                 self.stats["build_failures"] += 1

@@ -103,12 +103,18 @@ def main(argv=None):
     ap.add_argument("--num-tools", type=int, default=0,
                     help="tile+perturb the tool table to this size "
                          "(> --n-tools; 0 = no scaling) — the index-at-scale demo")
+    ap.add_argument("--learn", action="store_true",
+                    help="after serving, run one learning-plane step "
+                         "(repro.learn) over the logged outcomes: the "
+                         "recommend_stages density plan decides whether the "
+                         "adapter/re-ranker even train, and any promotion "
+                         "is held-out-gated and hot-swapped into the router")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     print("== building tool benchmark + OATS control plane ==")
     bench = make_metatool_like(seed=args.seed, n_tools=args.n_tools, n_queries=args.n_queries)
-    router, _ = build_router(
+    router, pipe = build_router(
         bench, args.stage, backend=args.backend, num_tools=args.num_tools,
         seed=args.seed,
     )
@@ -162,6 +168,26 @@ def main(argv=None):
     )
     print(f"outcome log: {len(router.outcome_log)} events (feeds the next cron refinement)")
     print(f"index stats: {router.index.stats}")
+
+    if args.learn:
+        from repro.control import OutcomeStore
+        from repro.learn import LearnConfig, LearningController
+
+        print("== learning plane: one density-gated step over the outcome log ==")
+        store = OutcomeStore(n_tools=len(router.db))
+        store.drain_router(router)
+        learner = LearningController(
+            router.db, store, router, pipe.encoder.encode,
+            config=LearnConfig(min_new_events=1, min_queries=10),
+        )
+        report = learner.step()
+        plan = report.plan
+        print(f"plan: density {plan.density:.2f} ev/tool -> "
+              f"{sorted(plan.stages)} ({plan.reason})")
+        for stage, d in sorted(report.decisions.items()):
+            print(f"  {stage:8s}: {d.action} {d.reason}")
+        print(f"live stages: {sorted(report.active) or '(none)'} "
+              f"(stage v{report.stage_version})")
     return stats
 
 

@@ -1,0 +1,166 @@
+"""StageGuard: post-promotion shadow monitoring + automatic demotion.
+
+The learning plane's promotion gate protects a StageSet *before* activation
+on a held-out slice of the outcome window; this guard protects it *after*,
+on live labelled traffic — the same division of labor `TableGuard` gives
+table swaps, against the same blind spots (window-vs-traffic distribution
+shift, a stage activated out-of-band that bypassed the gate).
+
+Serving code reports each labelled result via
+`observe(result.stage_version, result.tools, relevant)`; the guard keeps a
+rolling NDCG@k window per stage version, freezes the predecessor's rolling
+NDCG as each promoted version's baseline (`note_promotion`, or lazily for
+unannounced out-of-band `set_stages` calls), and `check()` demotes a
+version regressing past `tolerance` after `min_samples` labels via
+`SemanticRouter.rollback_stages(expect_current=...)` — compare-and-swap, so
+a promotion that lands after judgement can never be condemned on evidence
+it did not generate. The restored StageSet comes back under a new version
+with no baseline (it *is* the baseline), so demotion cannot cascade into
+flapping — the invariants are `TableGuard`'s, applied to the stage axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import deque
+from typing import Deque, Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.metrics.retrieval import ndcg_at_k
+from repro.router.tooldb import ConflictError
+
+__all__ = ["StageGuardConfig", "StageGuardReport", "StageGuard"]
+
+
+@dataclasses.dataclass(frozen=True)
+class StageGuardConfig:
+    k: int = 5  # NDCG@k cutoff
+    window: int = 256  # rolling observations kept per stage version
+    min_samples: int = 32  # judge a version only after this many labels
+    tolerance: float = 0.02  # allowed NDCG drop vs the frozen baseline
+
+
+@dataclasses.dataclass
+class StageGuardReport:
+    # "healthy" | "insufficient_data" | "no_baseline" | "stale" |
+    # "regressed_unrestorable" | "demoted"
+    action: str
+    stage_version: int  # version under judgement when check() ran
+    ndcg: Optional[float] = None
+    baseline: Optional[float] = None
+    n_samples: int = 0
+    restored_version: Optional[int] = None  # new version after a demotion
+
+
+class StageGuard:
+    """Rolling per-stage-version quality monitor over labelled traffic."""
+
+    def __init__(self, router, config: StageGuardConfig = StageGuardConfig()):
+        self.router = router
+        self.config = config
+        self._ndcg: Dict[int, Deque[float]] = {}
+        self._baseline: Dict[int, Optional[float]] = {}
+        self._last_version = router.stage_version
+        self._lock = threading.Lock()
+        self.demotions: List[StageGuardReport] = []
+
+    # ------------------------------------------------------------- observing
+    def observe(
+        self,
+        stage_version: int,
+        ranked_tools: Iterable[int],
+        relevant: Iterable[int],
+    ) -> None:
+        """Record one labelled result against the stage set that served it
+        (`RouteResult.stage_version` — NOT `router.stage_version`, which may
+        have moved since the batch was scored)."""
+        nd = ndcg_at_k(list(ranked_tools), list(relevant), self.config.k)
+        with self._lock:
+            if stage_version not in self._ndcg:
+                self._ndcg[stage_version] = deque(maxlen=self.config.window)
+            self._ndcg[stage_version].append(float(nd))
+
+    def note_promotion(self, old_version: int, new_version: int) -> None:
+        """Freeze the outgoing stage set's rolling NDCG as the promoted
+        set's baseline (the LearningController calls this right after a
+        CAS activation). A predecessor without enough samples yields no
+        baseline — the guard then has nothing to judge the promotion by."""
+        with self._lock:
+            old = self._ndcg.get(old_version)
+            self._baseline[new_version] = (
+                float(np.mean(old))
+                if old is not None and len(old) >= self.config.min_samples
+                else None
+            )
+            self._last_version = new_version
+
+    def version_stats(self, stage_version: int) -> dict:
+        with self._lock:
+            nd = self._ndcg.get(stage_version, ())
+            return {
+                "n": len(nd),
+                "ndcg": float(np.mean(nd)) if nd else None,
+                "baseline": self._baseline.get(stage_version),
+            }
+
+    # -------------------------------------------------------------- judging
+    def check(self) -> StageGuardReport:
+        """Judge the live stage set; demote if it regressed past tolerance."""
+        with self._lock:
+            version = self.router.stage_version
+            if version != self._last_version and version not in self._baseline:
+                # unannounced promotion (out-of-band set_stages that bypassed
+                # the controller): freeze the displaced version's rolling
+                # NDCG as its baseline, like TableGuard does for tables
+                old = self._ndcg.get(self._last_version)
+                self._baseline[version] = (
+                    float(np.mean(old))
+                    if old is not None and len(old) >= self.config.min_samples
+                    else None
+                )
+            self._last_version = version
+            # prune dead versions (neither live nor a demotion target):
+            # a long-running daemon under promotion churn must not grow
+            # these dicts forever
+            alive = set(self.router.retained_stage_versions())
+            alive.add(version)
+            for d in (self._ndcg, self._baseline):
+                for v in [v for v in d if v not in alive]:
+                    del d[v]
+            window = self._ndcg.get(version)
+            n = len(window) if window is not None else 0
+            if n < self.config.min_samples:
+                return StageGuardReport("insufficient_data", version, n_samples=n)
+            ndcg = float(np.mean(window))
+            baseline = self._baseline.get(version)
+            if baseline is None:
+                return StageGuardReport("no_baseline", version, ndcg=ndcg, n_samples=n)
+            if ndcg + self.config.tolerance >= baseline:
+                return StageGuardReport(
+                    "healthy", version, ndcg=ndcg, baseline=baseline, n_samples=n
+                )
+            if not self.router.retained_stage_versions():
+                return StageGuardReport(
+                    "regressed_unrestorable", version,
+                    ndcg=ndcg, baseline=baseline, n_samples=n,
+                )
+            try:
+                restored = self.router.rollback_stages(expect_current=version)
+            except ConflictError:
+                # the condemned stage set is no longer live; judge the new
+                # one on its own evidence next check
+                return StageGuardReport("stale", version, ndcg=ndcg, n_samples=n)
+            # the restored set IS the new baseline: no judgement, no flap
+            self._baseline[restored] = None
+            self._last_version = restored
+            report = StageGuardReport(
+                "demoted",
+                version,
+                ndcg=ndcg,
+                baseline=baseline,
+                n_samples=n,
+                restored_version=restored,
+            )
+            self.demotions.append(report)
+            return report

@@ -1,0 +1,278 @@
+"""StageTrainers: turn an outcome window into trained stage artifacts.
+
+The offline fitting code in `core.adapter` / `core.reranker` consumes dense
+benchmark splits; these trainers are the bridge from the control plane's
+*streamed* evidence — a `RefinementBatch` built from the `OutcomeStore`
+ring — to those same training entry points, run off the hot path by the
+`LearningController`:
+
+  * `TrainWindow` freezes everything a training run needs (one table
+    snapshot + the window's deduped queries/masks + a train/val split of
+    positive-bearing queries) so the run is reproducible and attributable
+    to (table_version, window fingerprint);
+  * `AdapterTrainer` mines triplets (`mine_triplets`) over the window's
+    observed successes and runs `train_adapter` in query-side-only mode
+    (`adapt_tools=False`): the product is a pure query-transform whose
+    promotion never touches the tool table or any built index;
+  * `RerankerTrainer` fits an `OutcomeFeaturizer` on the window, featurizes
+    the top-C candidates of every train query, and runs `train_reranker`
+    on the *outcome-labelled* (query, candidate) pairs only — unobserved
+    pairs carry no label, conflating "not tried" with "failed" is exactly
+    the sparse-regime failure §7.3 warns about;
+  * `stage_ndcg` is the shared held-out gate metric: NDCG@5 of the ranking
+    the serving path would produce under a given `StageSet`, so promotion
+    decisions are judged on the exact serving composition (adapter before
+    scoring, re-ranker after) rather than a proxy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import adapter as adapter_lib
+from repro.core import reranker as reranker_lib
+from repro.core.features import OutcomeFeaturizer
+from repro.metrics.retrieval import batched_ndcg_at_k
+from repro.router.stages import StageSet
+
+__all__ = [
+    "TrainWindow",
+    "TrainedStage",
+    "AdapterTrainer",
+    "RerankerTrainer",
+    "stage_ndcg",
+    "featurizer_to_tree",
+    "featurizer_from_tree",
+]
+
+
+@dataclasses.dataclass
+class TrainWindow:
+    """One frozen training set: table snapshot + outcome-window evidence."""
+
+    table: np.ndarray  # [T, D] snapshot the training set is built on
+    table_version: int
+    query_emb: np.ndarray  # [Q, D] deduped window queries (batched-encoded)
+    query_tokens: List[np.ndarray]
+    pos_mask: np.ndarray  # [Q, T] observed successes
+    neg_mask: np.ndarray  # [Q, T] observed failures
+    tool_category: np.ndarray  # [T]
+    train_idx: np.ndarray  # rows used for fitting
+    val_idx: np.ndarray  # held-out positive-bearing rows (the gate slice)
+    fingerprint: str  # OutcomeStore.window_fingerprint() at build time
+
+    def tokens(self, idx: np.ndarray) -> List[np.ndarray]:
+        return [self.query_tokens[i] for i in idx]
+
+
+@dataclasses.dataclass
+class TrainedStage:
+    """A trainer's product, ready for the registry + gate."""
+
+    stage: str
+    params: dict  # numpy pytree (registry/serving both accept it)
+    aux: dict  # extra state the stage needs at serving (featurizer tree)
+    info: Dict[str, float]  # training diagnostics for reports/benchmarks
+
+    def apply_to(self, current: StageSet, artifact_version: Optional[int] = None) -> StageSet:
+        """Candidate StageSet = `current` with this stage replaced."""
+        if self.stage == "adapter":
+            return dataclasses.replace(
+                current,
+                # device-resident params: the hot path applies them per batch
+                adapter_params={k: jnp.asarray(v) for k, v in self.params.items()},
+                adapter_artifact=artifact_version,
+            )
+        assert self.stage == "rerank", self.stage
+        return dataclasses.replace(
+            current,
+            mlp_params={k: jnp.asarray(v) for k, v in self.params.items()},
+            featurizer=featurizer_from_tree(self.aux),
+            rerank_artifact=artifact_version,
+        )
+
+
+# --------------------------------------------------------------------- gate
+def stage_ndcg(
+    table: np.ndarray,
+    query_emb: np.ndarray,
+    query_tokens: List[np.ndarray],
+    relevance: np.ndarray,
+    stages: StageSet,
+    k: int = 5,
+    candidate_multiplier: int = 5,
+) -> float:
+    """Held-out NDCG@k of the ranking the serving path produces under
+    `stages` — adapter applied to queries before scoring, re-ranker over the
+    top-C candidates after, exactly like `SemanticRouter.route_batch`."""
+    q = stages.adapt_queries(np.asarray(query_emb, np.float32))
+    sims = q @ np.asarray(table, np.float32).T
+    if stages.has_reranker:
+        c = min(max(k * candidate_multiplier, k), table.shape[0])
+        order = np.argsort(-sims, axis=1)[:, :c]
+        cand_sims = np.take_along_axis(sims, order, axis=1)
+        feats = stages.featurizer.features(q, query_tokens, order, cand_sims)
+        topk = np.asarray(
+            reranker_lib.rerank_topk(
+                stages.mlp_params, jnp.asarray(feats), jnp.asarray(order),
+                min(k, c),
+            )
+        )
+    else:
+        topk = np.argsort(-sims, axis=1)[:, : min(k, sims.shape[1])]
+    return float(batched_ndcg_at_k(jnp.asarray(topk), jnp.asarray(relevance)))
+
+
+# ------------------------------------------------------------------ trainers
+class AdapterTrainer:
+    """§4.3 contrastive adapter from streamed outcomes (query-side only)."""
+
+    stage = "adapter"
+
+    def __init__(self, config: Optional[adapter_lib.AdapterConfig] = None):
+        # online defaults: adapt_tools=False is the hot-swap contract; a few
+        # epochs at a serving-loop-friendly lr (the offline 1e-5/5-epoch
+        # schedule assumes many passes over a static corpus, not a bounded
+        # window between controller steps) — early stopping on held-out
+        # NDCG@5 inside train_adapter keeps the schedule safe
+        self.config = config or adapter_lib.AdapterConfig(
+            lr=3e-4, epochs=6, adapt_tools=False
+        )
+        assert not self.config.adapt_tools, (
+            "the learning plane serves the adapter query-side only; training "
+            "with adapt_tools=True would optimize a different deployment"
+        )
+
+    def train(
+        self, window: TrainWindow, live_stages: Optional[StageSet] = None
+    ) -> TrainedStage:
+        # `live_stages` is ignored by design: a trained adapter REPLACES the
+        # live one wholesale, so it learns from raw encoder embeddings —
+        # composing h(h'(q)) would couple artifacts across generations
+        cfg = self.config
+        triplets = adapter_lib.mine_triplets(
+            window.query_emb[window.train_idx],
+            window.table,
+            window.pos_mask[window.train_idx],
+            n_hard=cfg.n_hard_negatives,
+            seed=cfg.seed,
+        )
+        if len(triplets[0]) == 0:
+            raise ValueError(
+                "no mineable triplets in the window (every positive-bearing "
+                "query lacks enough hard negatives)"
+            )
+        params, history = adapter_lib.train_adapter(
+            window.query_emb[window.train_idx],
+            window.table,
+            triplets,
+            window.query_emb[window.val_idx],
+            window.pos_mask[window.val_idx],
+            None,
+            cfg,
+        )
+        return TrainedStage(
+            stage=self.stage,
+            params={k: np.asarray(v) for k, v in params.items()},
+            aux={},
+            info={
+                "n_triplets": float(len(triplets[0])),
+                "val_ndcg_first": float(history["val_ndcg"][0]),
+                "val_ndcg_best": float(max(history["val_ndcg"])),
+            },
+        )
+
+
+class RerankerTrainer:
+    """§4.2 MLP re-ranker from outcome-labelled (query, candidate) pairs."""
+
+    stage = "rerank"
+
+    def __init__(
+        self,
+        config: Optional[reranker_lib.RerankerConfig] = None,
+        k: int = 5,
+        min_pairs: int = 64,
+    ):
+        self.config = config or reranker_lib.RerankerConfig(epochs=10)
+        self.k = int(k)
+        self.min_pairs = int(min_pairs)
+
+    def train(
+        self, window: TrainWindow, live_stages: Optional[StageSet] = None
+    ) -> TrainedStage:
+        cfg = self.config
+        tr = window.train_idx
+        # the re-ranker runs DOWNSTREAM of the adapter at serving time, so
+        # its featurizer and candidate ordering must be fit on the same
+        # query representation the serving path scores with — the live
+        # adapter's output, when one is active (training/serving skew
+        # otherwise: the MLP would score a feature distribution it never saw)
+        q = window.query_emb[tr]
+        if live_stages is not None:
+            q = live_stages.adapt_queries(q)
+        c = min(max(self.k * cfg.candidate_multiplier, self.k), window.table.shape[0])
+        sims = q @ window.table.T
+        order = np.argsort(-sims, axis=1)[:, :c]
+        cand_sims = np.take_along_axis(sims, order, axis=1)
+        featurizer = OutcomeFeaturizer.fit(
+            q,
+            window.tokens(tr),
+            window.pos_mask[tr],
+            order[:, : self.k],
+            window.tool_category,
+            seed=cfg.seed,
+        )
+        feats = featurizer.features(q, window.tokens(tr), order, cand_sims)
+        labels = np.take_along_axis(window.pos_mask[tr], order, axis=1)
+        # train ONLY on observed pairs: an unobserved candidate is unlabelled,
+        # not failed (the §7.3 sparse-regime trap)
+        observed = np.take_along_axis(
+            (window.pos_mask[tr] + window.neg_mask[tr]) > 0, order, axis=1
+        )
+        n_pairs = int(observed.sum())
+        if n_pairs < self.min_pairs:
+            raise ValueError(
+                f"only {n_pairs} outcome-labelled pairs in the window "
+                f"(need >= {self.min_pairs})"
+            )
+        params, losses = reranker_lib.train_reranker(
+            feats[observed], labels[observed], cfg
+        )
+        return TrainedStage(
+            stage=self.stage,
+            params={k: np.asarray(v) for k, v in params.items()},
+            aux=featurizer_to_tree(featurizer),
+            info={
+                "n_pairs": float(n_pairs),
+                "loss_first": float(losses[0]),
+                "loss_last": float(losses[-1]),
+            },
+        )
+
+
+# ------------------------------------------- featurizer <-> checkpoint tree
+def featurizer_to_tree(f: OutcomeFeaturizer) -> dict:
+    """Featurizer state as an array pytree (registry aux / checkpointable)."""
+    return {
+        "cluster_centroids": np.asarray(f.cluster_centroids),
+        "success_rate": np.asarray(f.success_rate),
+        "tool_freq": np.asarray(f.tool_freq),
+        "tool_category": np.asarray(f.tool_category),
+        "cluster_category": np.asarray(f.cluster_category),
+        "mean_query_len": np.float64(f.mean_query_len),
+    }
+
+
+def featurizer_from_tree(tree: dict) -> OutcomeFeaturizer:
+    return OutcomeFeaturizer(
+        cluster_centroids=np.asarray(tree["cluster_centroids"], np.float32),
+        success_rate=np.asarray(tree["success_rate"], np.float32),
+        tool_freq=np.asarray(tree["tool_freq"], np.float32),
+        tool_category=np.asarray(tree["tool_category"], np.int64),
+        cluster_category=np.asarray(tree["cluster_category"], np.int64),
+        mean_query_len=float(np.asarray(tree["mean_query_len"])),
+    )

@@ -41,14 +41,27 @@ the live snapshot whenever the index is stale (mid-rebuild after a
 control-plane `swap_table`/`rollback`) or the batch carries candidate masks
 the backend cannot honor. The swap/rollback protocol is untouched: scores
 and `table_version` always come from the same atomic snapshot.
+
+Learned stages are hot-swappable (PR 4): the adapter head and the Stage-2
+re-ranker live in one immutable `StageSet` behind a version counter with
+the exact discipline the table has. `route_batch` reads ONE stage snapshot
+at entry (the adapter is applied to the query block before the index
+backend scores — query-side only, so promotions never invalidate a built
+index — and the re-ranker params come from the same snapshot), so an
+in-flight batch finishes on the stages it started with even while the
+learning plane promotes or demotes mid-batch. `set_stages` is
+compare-and-swap (ConflictError on a lost race), superseded sets are
+retained in a bounded history, and `rollback_stages` restores one — the
+learning plane's `StageGuard` demotion hinge. `RouteResult.stage_version`
+reports the snapshot that produced the scores, next to `table_version`.
 """
 from __future__ import annotations
 
 import dataclasses
 import threading
 import time
-from collections import deque
-from typing import Callable, Deque, List, Optional, Sequence
+from collections import OrderedDict, deque
+from typing import Callable, Deque, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -57,9 +70,10 @@ from repro.core import reranker as reranker_lib
 from repro.core.features import OutcomeFeaturizer
 from repro.core.retrieval import NEG_INF
 from repro.index import ToolIndexManager
-from repro.router.tooldb import ToolsDatabase
+from repro.router.stages import StageSet
+from repro.router.tooldb import ConflictError, ToolsDatabase
 
-__all__ = ["RouteResult", "OutcomeEvent", "SemanticRouter"]
+__all__ = ["RouteResult", "OutcomeEvent", "SemanticRouter", "StageSet"]
 
 
 @dataclasses.dataclass
@@ -69,6 +83,10 @@ class RouteResult:
     latency_ms: float  # per-query share of the (possibly batched) route call
     pool: str  # backend pool the request was dispatched to
     table_version: int
+    # version of the StageSet snapshot that scored this batch: together with
+    # table_version it fully determines the scores (the learning plane's
+    # StageGuard keys its shadow windows on it)
+    stage_version: int = 0
 
 
 @dataclasses.dataclass
@@ -97,12 +115,29 @@ class SemanticRouter:
         index: Optional[ToolIndexManager] = None,
         backend: str = "dense",
         backend_opts: Optional[dict] = None,
+        stages: Optional[StageSet] = None,
+        stage_history_limit: int = 4,
     ):
         self.db = db
         self.embed_fn = embed_fn
         self.k = k
-        self.mlp_params = mlp_params
-        self.featurizer = featurizer
+        # learned stages live in one immutable snapshot behind a version
+        # counter (the table discipline applied to the adapter/re-ranker):
+        # constructor args mlp_params/featurizer seed the initial set for
+        # backwards compatibility with pre-learning-plane callers
+        assert stage_history_limit >= 1
+        if stages is None:
+            stages = StageSet(mlp_params=mlp_params, featurizer=featurizer)
+        else:
+            assert mlp_params is None and featurizer is None, (
+                "pass learned stages either via stages= or via "
+                "mlp_params=/featurizer=, not both"
+            )
+        self._stages = stages
+        self._stage_version = 0
+        self._stage_history: "OrderedDict[int, StageSet]" = OrderedDict()
+        self._stage_history_limit = int(stage_history_limit)
+        self._stage_lock = threading.Lock()
         self.candidate_multiplier = candidate_multiplier
         self.pool_selector = pool_selector or (lambda q, tools: "default")
         # batched encoder (one call for Q queries); falls back to looping
@@ -138,6 +173,90 @@ class SemanticRouter:
         if self._owns_index:
             self.index.close()
 
+    # --------------------------------------------------------- learned stages
+    @property
+    def mlp_params(self) -> Optional[dict]:
+        """Live re-ranker params (read-only view of the current StageSet)."""
+        return self._stages.mlp_params
+
+    @property
+    def featurizer(self) -> Optional[OutcomeFeaturizer]:
+        return self._stages.featurizer
+
+    @property
+    def stage_version(self) -> int:
+        return self._stage_version
+
+    def stage_set(self) -> Tuple[int, StageSet]:
+        """(version, StageSet) read atomically w.r.t. promotions — the
+        stage-side analogue of `ToolsDatabase.snapshot()`."""
+        with self._stage_lock:
+            return self._stage_version, self._stages
+
+    def set_stages(
+        self, stages: StageSet, expect_version: Optional[int] = None
+    ) -> int:
+        """Atomically deploy a new StageSet (returns the new version).
+
+        The outgoing set is retained as a demotion target (bounded history,
+        oldest evicted first). `expect_version` makes activation
+        compare-and-swap: a promotion gated against stage version N is
+        refused (ConflictError) if another deployment landed past N while it
+        was being trained — mirroring `swap_table(expect_current=...)`.
+        """
+        with self._stage_lock:
+            if expect_version is not None and self._stage_version != expect_version:
+                raise ConflictError(
+                    f"stages are v{self._stage_version}, not v{expect_version} "
+                    f"the promotion was gated against; refusing activation"
+                )
+            self._stage_history[self._stage_version] = self._stages
+            while len(self._stage_history) > self._stage_history_limit:
+                self._stage_history.popitem(last=False)
+            self._stages = stages
+            self._stage_version += 1
+            return self._stage_version
+
+    def retained_stage_versions(self) -> List[int]:
+        """Stage versions available as demotion targets, oldest first."""
+        with self._stage_lock:
+            return list(self._stage_history.keys())
+
+    def rollback_stages(
+        self,
+        to_version: Optional[int] = None,
+        expect_current: Optional[int] = None,
+    ) -> int:
+        """Instant demotion to a retained StageSet (returns the new version).
+
+        Same semantics as `ToolsDatabase.rollback`: the restore is itself a
+        version bump, the condemned set is not retained, retained sets newer
+        than the target are dropped, and `expect_current` refuses
+        (ConflictError) when another promotion landed after the caller
+        judged `expect_current` — the StageGuard's safety hinge.
+        """
+        with self._stage_lock:
+            if expect_current is not None and self._stage_version != expect_current:
+                raise ConflictError(
+                    f"stages are v{self._stage_version}, not the judged "
+                    f"v{expect_current}; refusing demotion"
+                )
+            if not self._stage_history:
+                raise RuntimeError("no previous stage set to roll back to")
+            if to_version is None:
+                to_version = next(reversed(self._stage_history))
+            if to_version not in self._stage_history:
+                raise RuntimeError(
+                    f"stage version {to_version} not retained "
+                    f"(available: {list(self._stage_history.keys())})"
+                )
+            stages = self._stage_history.pop(to_version)
+            for v in [v for v in self._stage_history if v > to_version]:
+                del self._stage_history[v]
+            self._stages = stages
+            self._stage_version += 1
+            return self._stage_version
+
     # ---------------------------------------------------------- serving path
     def _embed_batch(self, queries: Sequence[np.ndarray]) -> np.ndarray:
         if self.embed_batch_fn is not None:
@@ -164,11 +283,15 @@ class SemanticRouter:
         n_q = len(queries)
         if n_q == 0:
             return []
+        # ONE stage snapshot per batch: a promotion/demotion landing mid-call
+        # cannot mix stage configurations within the batch, and the reported
+        # stage_version is the set that actually produced the scores
+        stage_version, stages = self.stage_set()
         q = self._embed_batch(queries)  # [Q, D]
         # swap_table asserts the table shape is invariant, so the tool count
         # is stable across versions and safe to read without a snapshot
         n_t = len(self.db)
-        rerank = self.mlp_params is not None and self.featurizer is not None
+        rerank = stages.has_reranker
         c = min(self.k * self.candidate_multiplier, n_t) if rerank else min(self.k, n_t)
         k_eff = min(self.k, c)  # tables smaller than k yield short results
         # pad the batch up to a power-of-two bucket so the jitted scoring
@@ -185,6 +308,14 @@ class SemanticRouter:
             )
         else:
             q_in, queries_in, masks_in = q, queries, candidate_masks
+        # adapter head (query-side only) runs BEFORE the index backend — the
+        # tool table is untouched, so any built IVF/Pallas index stays valid
+        # across adapter promotions — and on the PADDED block, so the jitted
+        # head compiles once per power-of-two bucket like the scoring path
+        # (a retrace per distinct Q is a multi-ms stall against the budget).
+        # pool_selector below keeps seeing the raw encoder embedding `q`:
+        # pool affinity must not flip on stage promotions/demotions.
+        q_in = stages.adapt_queries(q_in)
         # the index layer scores the batch against an atomic (version, table)
         # snapshot — the reported table_version and the scores come from the
         # SAME table even if swap_table lands mid-batch, whichever backend
@@ -193,9 +324,9 @@ class SemanticRouter:
             q_in, c, masks_in
         )
         if rerank:
-            feats = self.featurizer.features(q_in, queries_in, cand_idx_np, cand_scores_np)
+            feats = stages.featurizer.features(q_in, queries_in, cand_idx_np, cand_scores_np)
             top_idx, top_scores = reranker_lib.rerank_topk_scored(
-                self.mlp_params,
+                stages.mlp_params,
                 jnp.asarray(feats),
                 jnp.asarray(cand_idx_np),
                 k_eff,
@@ -219,6 +350,7 @@ class SemanticRouter:
                     latency_ms=latency_ms,
                     pool=self.pool_selector(q[j], tools),
                     table_version=table_version,
+                    stage_version=stage_version,
                 )
             )
         return out

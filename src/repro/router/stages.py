@@ -1,0 +1,85 @@
+"""StageSet: one atomic snapshot of the gateway's learned serving stages.
+
+The PR 2 control plane made the *embedding table* hot-swappable
+(`ToolsDatabase.swap_table`); this module does the same for the learned
+stages the paper layers on top — the §4.3 contrastive adapter and the §4.2
+MLP re-ranker. A `StageSet` is an immutable value: the adapter params
+applied to query embeddings before the index backend scores (query-side
+only, so the tool table — and any built IVF/Pallas index over it — is
+untouched by a promotion), plus the re-ranker params + featurizer applied
+per batch after candidate retrieval.
+
+`SemanticRouter` holds exactly one live StageSet behind a version counter
+with the same discipline as the table: `route_batch` reads one snapshot at
+entry and finishes on it even if a promotion lands mid-batch, promotions
+are compare-and-swap (`set_stages(expect_version=...)` raises
+`ConflictError` on a lost race), and a bounded history of superseded sets
+makes demotion (`rollback_stages`) instant — the learning plane's
+`StageGuard` uses it exactly like the table guard uses
+`ToolsDatabase.rollback`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adapter import adapter_apply
+from repro.core.features import OutcomeFeaturizer
+
+__all__ = ["StageSet"]
+
+# one jitted adapter application shared by every router — the hot path runs
+# it per batch, and a per-call trace would cost more than the matmuls
+_adapter_apply_j = jax.jit(adapter_apply, static_argnames=("scale",))
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSet:
+    """Immutable learned-stage configuration served by one router snapshot.
+
+    `adapter_artifact` / `rerank_artifact` are the `ArtifactRegistry`
+    versions the params came from (None for hand-wired params), so serving
+    results stay attributable to a specific trained artifact.
+    """
+
+    adapter_params: Optional[dict] = None  # §4.3 head, query-side at serving
+    adapter_scale: float = 1.0
+    adapter_artifact: Optional[int] = None
+    mlp_params: Optional[dict] = None  # §4.2 [7,64,32,1] MLP
+    featurizer: Optional[OutcomeFeaturizer] = None
+    rerank_artifact: Optional[int] = None
+
+    @property
+    def has_adapter(self) -> bool:
+        return self.adapter_params is not None
+
+    @property
+    def has_reranker(self) -> bool:
+        return self.mlp_params is not None and self.featurizer is not None
+
+    @property
+    def active(self) -> frozenset:
+        """Stage names live in this set (mirrors `DeploymentPlan.stages`)."""
+        s = set()
+        if self.has_adapter:
+            s.add("adapter")
+        if self.has_reranker:
+            s.add("rerank")
+        return frozenset(s)
+
+    def adapt_queries(self, q: np.ndarray) -> np.ndarray:
+        """Apply the adapter head to a [Q, D] query block (identity when no
+        adapter is active). Unit rows in, unit rows out — the index backend
+        scores the adapted queries against the *unadapted* table."""
+        if not self.has_adapter:
+            return q
+        return np.asarray(
+            _adapter_apply_j(
+                self.adapter_params, jnp.asarray(q), scale=self.adapter_scale
+            ),
+            dtype=np.float32,
+        )

@@ -1,7 +1,13 @@
 """Paper §7.2-7.3 deployment policy tests."""
 from hypothesis import given, settings, strategies as st
 
-from repro.core.deployment import recommend_stages
+from repro.core.deployment import (
+    ADAPTER_MIN_LOGS,
+    ADAPTER_MIN_TOOLS,
+    MLP_DENSITY_THRESHOLD,
+    data_density,
+    recommend_stages,
+)
 
 
 def test_toolbench_regime_rejects_mlp():
@@ -36,3 +42,68 @@ def test_refinement_always_on_and_stages_consistent(n_tools, n_logs):
     assert plan.stages >= {"refine"}
     if plan.mlp_reranker:
         assert plan.density >= 10.0
+
+
+# -------------------------------------------------- density boundary values
+
+
+def test_mlp_density_threshold_is_inclusive():
+    """§7.2: the re-ranker gate is >= 10 examples/tool, exactly at the
+    boundary (300 tools avoids the small-set 5x rule)."""
+    at = recommend_stages(n_tools=300, n_outcome_examples=int(300 * MLP_DENSITY_THRESHOLD))
+    below = recommend_stages(n_tools=300, n_outcome_examples=int(300 * MLP_DENSITY_THRESHOLD) - 1)
+    assert at.mlp_reranker and at.density == MLP_DENSITY_THRESHOLD
+    assert not below.mlp_reranker
+
+
+def test_mlp_tool_count_boundary():
+    """The re-ranker is only viable up to 500 tools (inclusive)."""
+    dense_logs = 500 * 20  # well past the density threshold either way
+    assert recommend_stages(500, dense_logs).mlp_reranker
+    assert not recommend_stages(501, dense_logs).mlp_reranker
+
+
+def test_small_set_needs_5x_density():
+    """<200 tools: refinement alone captures most gains; the re-ranker needs
+    5x the usual density to deploy (§7.3)."""
+    n = 199
+    just_under = int(n * 5 * MLP_DENSITY_THRESHOLD) - 1
+    at = int(n * 5 * MLP_DENSITY_THRESHOLD)
+    assert not recommend_stages(n, just_under).mlp_reranker
+    assert recommend_stages(n, at).mlp_reranker
+    assert recommend_stages(200, int(200 * MLP_DENSITY_THRESHOLD)).mlp_reranker
+
+
+def test_adapter_boundaries_are_strict():
+    """§7.3: |T| > 500 AND > 10K logs — both strict inequalities."""
+    assert not recommend_stages(ADAPTER_MIN_TOOLS, ADAPTER_MIN_LOGS + 1).contrastive_adapter
+    assert not recommend_stages(ADAPTER_MIN_TOOLS + 1, ADAPTER_MIN_LOGS).contrastive_adapter
+    assert recommend_stages(ADAPTER_MIN_TOOLS + 1, ADAPTER_MIN_LOGS + 1).contrastive_adapter
+
+
+def test_data_density_handles_zero_tools():
+    assert data_density(100, 0) == 100.0  # clamped divisor, no crash
+    assert recommend_stages(0, 0).refine
+
+
+# ----------------------------------------------- DeploymentPlan.stages frozen
+
+
+def test_stages_reflects_exact_flag_combination():
+    sparse = recommend_stages(n_tools=2413, n_outcome_examples=700)
+    assert sparse.stages == frozenset({"refine"})
+    rerank = recommend_stages(n_tools=300, n_outcome_examples=6000)
+    assert rerank.stages == frozenset({"refine", "rerank"})
+    adapter = recommend_stages(n_tools=2413, n_outcome_examples=50_000)
+    assert adapter.stages == frozenset({"refine", "adapter"})
+
+
+def test_stages_is_reusable_frozenset():
+    """stages is a property over the frozen flags: hashable, stable across
+    reads, and usable as a set key (the learning plane keys decisions and
+    StageSet.active comparisons on it)."""
+    plan = recommend_stages(n_tools=300, n_outcome_examples=6000)
+    assert plan.stages == plan.stages
+    assert hash(plan.stages) == hash(frozenset({"refine", "rerank"}))
+    assert {plan.stages: "x"}[frozenset({"refine", "rerank"})] == "x"
+    assert "adapter" not in plan.stages

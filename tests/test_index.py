@@ -111,11 +111,79 @@ def test_ivf_rejects_masks_and_tiny_tables_work(scaled):
     assert recall >= 0.98
 
 
+def test_ivf_warm_start_converges_faster_with_recall_parity(scaled):
+    """Seeding k-means from the previous index's centroids on a gently moved
+    table (the swap-triggered rebuild case) must cut iterations while
+    keeping recall parity with a cold build."""
+    table, queries, _ = scaled
+    cold = IVFBackend(table, 0)
+    # a control-plane-style swap: small refinement nudge, geometry preserved
+    rng = np.random.default_rng(1)
+    moved = table + 1e-3 * rng.standard_normal(table.shape).astype(np.float32)
+    moved /= np.maximum(np.linalg.norm(moved, axis=-1, keepdims=True), 1e-9)
+    warm = IVFBackend(moved, 1, warm_start=cold.warm_start_state())
+    cold2 = IVFBackend(moved, 1)
+    assert warm.kmeans_iters_run < cold2.kmeans_iters_run, (
+        f"warm start did not converge faster "
+        f"({warm.kmeans_iters_run} vs {cold2.kmeans_iters_run} iters)"
+    )
+    assert warm.kmeans_iters_run == 1  # seeded at the fixed point
+    _, exact = DenseBackend(moved, 1).topk(queries, 5)
+
+    def recall(backend):
+        _, approx = backend.topk(queries, 5)
+        return np.mean([
+            len(set(exact[j]) & set(approx[j])) / 5 for j in range(len(queries))
+        ])
+
+    r_warm, r_cold = recall(warm), recall(cold2)
+    assert r_warm >= 0.98, f"warm-start recall@5 {r_warm:.4f} below floor"
+    assert r_warm >= r_cold - 0.02, (
+        f"warm start lost recall vs cold build ({r_warm:.4f} vs {r_cold:.4f})"
+    )
+    # an incompatible warm start (wrong cluster count) is ignored, not fatal:
+    # the build falls back to the cold path (identical, deterministic)
+    bad = IVFBackend(moved, 2, warm_start=cold.centroids[:3])
+    assert bad.kmeans_iters_run == cold2.kmeans_iters_run
+    np.testing.assert_allclose(bad.centroids, cold2.centroids)
+
+
+def test_manager_passes_warm_start_across_swap_rebuilds(small_bench, scaled):
+    """A swap-triggered rebuild must seed from the outgoing index's
+    centroids automatically (the ROADMAP 'next lever')."""
+    table, queries, _ = scaled
+    db, _ = _db_and_encoder(small_bench, table=table)
+    manager = ToolIndexManager(db, backend="ivf", async_rebuild=False)
+    assert manager.wait_ready()
+    first = manager._backend
+    rng = np.random.default_rng(2)
+    moved = table + 1e-3 * rng.standard_normal(table.shape).astype(np.float32)
+    moved /= np.maximum(np.linalg.norm(moved, axis=-1, keepdims=True), 1e-9)
+    db.swap_table(moved)  # synchronous listener: rebuild completes inline
+    assert manager.is_fresh()
+    rebuilt = manager._backend
+    assert rebuilt.table_version == db.table_version
+    assert rebuilt.kmeans_iters_run < first.kmeans_iters_run, (
+        "swap rebuild did not warm-start from the previous index"
+    )
+    scores, idx, version = manager.topk(queries, 5)
+    assert version == db.table_version
+    _, exact = DenseBackend(moved, version).topk(queries, 5)
+    recall = np.mean([
+        len(set(np.asarray(exact)[j]) & set(idx[j])) / 5 for j in range(len(queries))
+    ])
+    assert recall >= 0.98
+    manager.close()
+
+
 # ------------------------------------------------------- cross-backend router
 def test_route_result_fields_consistent_across_backends(small_bench):
     """Every backend's RouteResult carries the same fields; exact backends
     agree on the ranking; scores always reproduce the final ranking."""
-    expected_fields = {"tools", "scores", "latency_ms", "pool", "table_version"}
+    expected_fields = {
+        "tools", "scores", "latency_ms", "pool", "table_version",
+        "stage_version",
+    }
     per_backend = {}
     for kind in BACKENDS:
         db, enc = _db_and_encoder(small_bench)

@@ -1,0 +1,512 @@
+"""Learning-plane tests: ArtifactRegistry versioning/persistence, StageSet
+CAS + rollback on the router, gated promotion + suppression semantics of the
+LearningController, StageGuard auto-demotion, and a threaded smoke test of
+route_batch concurrent with stage churn (scores must stay self-consistent
+with the reported (table_version, stage_version))."""
+import dataclasses
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.control import OutcomeStore
+from repro.core import adapter as adapter_lib
+from repro.core.deployment import DeploymentPlan
+from repro.embedding.bag_encoder import BagEncoder
+from repro.learn import (
+    ArtifactRegistry,
+    LearnConfig,
+    LearningController,
+    StageGuard,
+    StageGuardConfig,
+    TrainedStage,
+    build_train_window,
+    featurizer_from_tree,
+    featurizer_to_tree,
+)
+from repro.router.gateway import SemanticRouter, StageSet
+from repro.router.tooldb import ConflictError, ToolRecord, ToolsDatabase
+
+
+def _db_and_encoder(bench, **kw):
+    enc = BagEncoder(bench.vocab)
+    records = [
+        ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
+        for i in range(bench.n_tools)
+    ]
+    return ToolsDatabase(records, enc.encode(bench.desc_tokens), **kw), enc
+
+
+def _serve(router, bench, idx, observe=None, batch_size=64):
+    for lo in range(0, len(idx), batch_size):
+        chunk = idx[lo : lo + batch_size]
+        results = router.route_batch([bench.query_tokens[qi] for qi in chunk])
+        for qi, res in zip(chunk, results):
+            for t in res.tools:
+                router.record_outcome(
+                    bench.query_tokens[qi], t, int(t in bench.relevant[qi])
+                )
+            if observe is not None:
+                observe(res, bench.relevant[qi])
+
+
+def _forced_plan(refine=True, rerank=False, adapter=False):
+    def plan_fn(n_tools, n_examples):
+        return DeploymentPlan(
+            refine=refine, mlp_reranker=rerank, contrastive_adapter=adapter,
+            density=n_examples / max(n_tools, 1), reason="forced (test)",
+        )
+
+    return plan_fn
+
+
+def _learn_world(bench, *, plan_fn, min_new_events=50, guard=None, **cfg_kw):
+    db, enc = _db_and_encoder(bench)
+    store = OutcomeStore(n_tools=len(db), capacity=50_000)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        outcome_sink=store.append,
+    )
+    learner = LearningController(
+        db, store, router, enc.encode,
+        guard=guard,
+        config=LearnConfig(min_new_events=min_new_events, min_queries=10, **cfg_kw),
+        plan_fn=plan_fn,
+    )
+    return db, enc, store, router, learner
+
+
+# ------------------------------------------------------------ ArtifactRegistry
+
+
+def test_registry_versions_bounded_latest_and_discard():
+    reg = ArtifactRegistry(history_limit=3)
+    for i in range(5):
+        art = reg.register(
+            "adapter", {"w": np.full((2, 2), i, np.float32)},
+            table_version=i, fingerprint=f"fp{i}",
+        )
+        assert art.version == i + 1
+    assert reg.versions("adapter") == [3, 4, 5]  # bounded: oldest evicted
+    assert reg.latest("adapter").version == 5
+    with pytest.raises(KeyError):
+        reg.get("adapter", 1)
+    reg.discard("adapter", 5)
+    assert reg.latest("adapter").version == 4
+    reg.discard("adapter", 99)  # idempotent on unknown versions
+
+
+def test_registry_rollback_drops_newer_versions():
+    reg = ArtifactRegistry()
+    for i in range(3):
+        reg.register("rerank", {"w": np.zeros(1)}, table_version=0, fingerprint="f")
+    art = reg.rollback("rerank")
+    assert art.version == 2 and reg.versions("rerank") == [1, 2]
+    art = reg.rollback("rerank", to_version=1)
+    assert art.version == 1 and reg.versions("rerank") == [1]
+    with pytest.raises(RuntimeError):
+        reg.rollback("rerank")  # nothing older retained
+
+
+def test_registry_persistence_roundtrip(tmp_path, small_bench):
+    from repro.core.features import OutcomeFeaturizer
+
+    enc = BagEncoder(small_bench.vocab)
+    tr = small_bench.train_idx[:40]
+    qe = enc.encode([small_bench.query_tokens[i] for i in tr])
+    rel = small_bench.relevance_matrix()[tr]
+    table = enc.encode(small_bench.desc_tokens)
+    retrieved = np.argsort(-(qe @ table.T), axis=1)[:, :5]
+    feat = OutcomeFeaturizer.fit(
+        qe, [small_bench.query_tokens[i] for i in tr], rel, retrieved,
+        small_bench.tool_category,
+    )
+    reg = ArtifactRegistry()
+    params = adapter_lib.init_adapter(jax.random.PRNGKey(0))
+    reg.register(
+        "adapter", {k: np.asarray(v) for k, v in params.items()},
+        table_version=3, fingerprint="abcd", metrics={"ndcg_candidate": 0.9},
+    )
+    reg.register(
+        "rerank", {"w0": np.ones((7, 4), np.float32)},
+        table_version=3, fingerprint="abcd", aux=featurizer_to_tree(feat),
+    )
+    reg.save(str(tmp_path))
+    back = ArtifactRegistry.restore(str(tmp_path))
+    art = back.latest("adapter")
+    assert art.table_version == 3 and art.fingerprint == "abcd"
+    assert art.metrics["ndcg_candidate"] == pytest.approx(0.9)
+    np.testing.assert_allclose(art.params["w1"], np.asarray(params["w1"]))
+    feat_back = featurizer_from_tree(back.latest("rerank").aux)
+    np.testing.assert_allclose(feat_back.success_rate, feat.success_rate)
+    assert feat_back.mean_query_len == pytest.approx(feat.mean_query_len)
+    # registered versions keep counting from where the saved registry stopped
+    assert back.register(
+        "adapter", {"w": np.zeros(1)}, table_version=4, fingerprint="x"
+    ).version == 2
+
+
+# ------------------------------------------------- StageSet CAS on the router
+
+
+def test_stage_cas_and_bounded_history(small_bench):
+    db, enc = _db_and_encoder(small_bench)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        stage_history_limit=2,
+    )
+    params = adapter_lib.init_adapter(jax.random.PRNGKey(0))
+    v1 = router.set_stages(StageSet(adapter_params=params), expect_version=0)
+    assert v1 == 1 and router.stage_set()[1].has_adapter
+    with pytest.raises(ConflictError):
+        router.set_stages(StageSet(), expect_version=0)  # stale expectation
+    v2 = router.set_stages(StageSet(), expect_version=v1)
+    v3 = router.set_stages(StageSet(adapter_params=params))
+    assert router.retained_stage_versions() == [v1, v2]  # bounded at 2
+    # rollback refuses when the judged version is no longer live
+    with pytest.raises(ConflictError):
+        router.rollback_stages(expect_current=v2)
+    v4 = router.rollback_stages(expect_current=v3)
+    assert v4 == 4 and not router.stage_set()[1].has_adapter
+    # the condemned v3 was not retained; v1 remains a target
+    assert router.retained_stage_versions() == [v1]
+
+
+def test_route_scores_match_reported_stage_version(small_bench):
+    """RouteResult.scores must be the exact similarities of the adapted
+    query against the reported table_version — recomputable from the
+    reported (table_version, stage_version) pair."""
+    db, enc = _db_and_encoder(small_bench)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5
+    )
+    rng = np.random.default_rng(0)
+    params = adapter_lib.init_adapter(jax.random.PRNGKey(1))
+    params = {  # non-identity: adapted scores must differ from raw ones
+        k: (v if k != "w2" else 0.3 * rng.standard_normal(v.shape).astype(np.float32))
+        for k, v in params.items()
+    }
+    router.set_stages(StageSet(adapter_params=params))
+    q_tokens = small_bench.query_tokens[small_bench.test_idx[0]]
+    res = router.route(q_tokens)
+    assert res.stage_version == 1
+    qe = enc.encode_one(q_tokens)[None]
+    q_adapted = StageSet(adapter_params=params).adapt_queries(qe)[0]
+    sims = db.embeddings @ q_adapted
+    expect = np.sort(sims)[::-1][:5]
+    np.testing.assert_allclose(res.scores, expect, atol=1e-5)
+    raw_top = np.sort(db.embeddings @ qe[0])[::-1][:5]
+    assert not np.allclose(expect, raw_top, atol=1e-5)
+
+
+def test_adapter_stage_composes_with_backends(small_bench):
+    """The adapter transforms queries BEFORE the index backend scores, so
+    dense and pallas (exact paths) must agree on the adapted ranking."""
+    db, enc = _db_and_encoder(small_bench)
+    params = adapter_lib.init_adapter(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(1)
+    params["w2"] = 0.3 * rng.standard_normal(params["w2"].shape).astype(np.float32)
+    stages = StageSet(adapter_params=params)
+    queries = [small_bench.query_tokens[i] for i in small_bench.test_idx[:8]]
+    results = {}
+    for backend in ("dense", "pallas"):
+        router = SemanticRouter(
+            db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+            backend=backend, stages=stages,
+        )
+        assert router.index.wait_ready()
+        results[backend] = router.route_batch(queries)
+        router.close()
+    for rd, rp in zip(results["dense"], results["pallas"]):
+        assert rd.tools == rp.tools
+        np.testing.assert_allclose(rd.scores, rp.scores, atol=1e-5)
+
+
+# ----------------------------------------------------------- LearningController
+
+
+class _CountingTrainer:
+    """Stub trainer: returns an identity adapter, counts invocations."""
+
+    stage = "adapter"
+
+    def __init__(self):
+        self.calls = 0
+
+    def train(self, window, live_stages=None):
+        self.calls += 1
+        params = adapter_lib.init_adapter(jax.random.PRNGKey(0))
+        return TrainedStage(
+            stage="adapter",
+            params={k: np.asarray(v) for k, v in params.items()},
+            aux={},
+            info={},
+        )
+
+
+def test_plan_suppression_never_trains(small_bench):
+    db, enc, store, router, learner = _learn_world(
+        small_bench, plan_fn=_forced_plan(rerank=False, adapter=False)
+    )
+    counting = _CountingTrainer()
+    learner.trainers["adapter"] = counting
+    _serve(router, small_bench, small_bench.train_idx[:40])
+    report = learner.step()
+    assert report.decisions["adapter"].action == "suppressed"
+    assert report.decisions["rerank"].action == "suppressed"
+    assert counting.calls == 0, "a plan-vetoed stage must never even train"
+    assert report.active == frozenset()
+
+
+def test_below_trigger_skips_training(small_bench):
+    db, enc, store, router, learner = _learn_world(
+        small_bench, plan_fn=_forced_plan(adapter=True), min_new_events=10_000
+    )
+    counting = _CountingTrainer()
+    learner.trainers["adapter"] = counting
+    _serve(router, small_bench, small_bench.train_idx[:20])
+    report = learner.step()
+    assert report.decisions["adapter"].action == "below_trigger"
+    assert counting.calls == 0
+
+
+def test_gate_rejects_non_improvement(small_bench):
+    """An identity adapter ties the live config's NDCG; min_gain=0 promotion
+    requires strict improvement, so the tie must be rejected."""
+    db, enc, store, router, learner = _learn_world(
+        small_bench, plan_fn=_forced_plan(adapter=True)
+    )
+    learner.trainers["adapter"] = _CountingTrainer()
+    _serve(router, small_bench, small_bench.train_idx[:60])
+    report = learner.step()
+    d = report.decisions["adapter"]
+    assert d.action == "gate_rejected"
+    assert d.ndcg_candidate == pytest.approx(d.ndcg_current, abs=1e-6)
+    assert learner.registry.latest("adapter") is None
+    assert router.stage_version == 0
+    # the trigger watermark was consumed: the next step does not retrain
+    # until fresh evidence arrives
+    assert learner.step().decisions["adapter"].action == "below_trigger"
+
+
+def test_real_adapter_promotion_lifts_heldout_ndcg(small_bench):
+    """Real training end-to-end on a forced-dense plan: the adapter must
+    clear the held-out gate, activate via CAS, and register its artifact
+    stamped with (table_version, window fingerprint)."""
+    db, enc, store, router, learner = _learn_world(
+        small_bench, plan_fn=_forced_plan(adapter=True)
+    )
+    _serve(router, small_bench, small_bench.train_idx)
+    fp = store.window_fingerprint()
+    report = learner.step()
+    d = report.decisions["adapter"]
+    assert d.action == "promoted", d
+    assert d.ndcg_candidate > d.ndcg_current
+    assert report.active == frozenset({"adapter"})
+    art = learner.registry.latest("adapter")
+    assert art is not None and art.version == d.artifact_version
+    assert art.table_version == db.table_version
+    assert art.fingerprint == fp
+    _, stages = router.stage_set()
+    assert stages.adapter_artifact == art.version
+
+
+def test_sparse_window_rerank_is_gate_rejected(small_bench):
+    """Even if the density plan is bypassed (forced), the held-out gate must
+    stop the re-ranker trained on a sparse window — the paper's §7.3
+    negative result enforced by measurement."""
+    db, enc, store, router, learner = _learn_world(
+        small_bench, plan_fn=_forced_plan(rerank=True)
+    )
+    _serve(router, small_bench, small_bench.train_idx[:120])
+    report = learner.step()
+    d = report.decisions["rerank"]
+    assert d.action in ("gate_rejected", "train_failed"), d
+    assert not router.stage_set()[1].has_reranker
+
+
+def test_table_swap_mid_training_stands_down(small_bench):
+    """A refinement swap landing mid-training stales the gate's evidence:
+    the promotion must stand down instead of activating on a table the
+    gate never saw."""
+    db, enc, store, router, learner = _learn_world(
+        small_bench, plan_fn=_forced_plan(adapter=True), min_gain=-1.0
+    )
+
+    class SwappingTrainer(_CountingTrainer):
+        def train(self, window, live_stages=None):
+            db.swap_table(db.embeddings.copy())  # concurrent refinement
+            return super().train(window, live_stages)
+
+    learner.trainers["adapter"] = SwappingTrainer()
+    _serve(router, small_bench, small_bench.train_idx[:60])
+    report = learner.step()
+    d = report.decisions["adapter"]
+    assert d.action == "table_moved", d
+    assert learner.registry.latest("adapter") is None
+    assert router.stage_version == 0
+
+
+def test_activation_conflict_discards_artifact(small_bench):
+    class RacingRouter(SemanticRouter):
+        def set_stages(self, stages, expect_version=None):
+            raise ConflictError("lost the race (test)")
+
+    db, enc = _db_and_encoder(small_bench)
+    store = OutcomeStore(n_tools=len(db), capacity=50_000)
+    router = RacingRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        outcome_sink=store.append,
+    )
+    learner = LearningController(
+        db, store, router, enc.encode,
+        config=LearnConfig(min_new_events=50, min_queries=10, min_gain=-1.0),
+        plan_fn=_forced_plan(adapter=True),
+    )
+    learner.trainers["adapter"] = _CountingTrainer()
+    _serve(router, small_bench, small_bench.train_idx[:60])
+    report = learner.step()
+    d = report.decisions["adapter"]
+    assert d.action == "activation_conflict"
+    # the never-deployed artifact must not linger as latest
+    assert learner.registry.latest("adapter") is None
+
+
+# -------------------------------------------------------------- StageGuard
+
+
+def test_stage_guard_demotes_regressing_promotion(small_bench):
+    guard_cfg = StageGuardConfig(min_samples=16, tolerance=0.02)
+    db, enc, store, router, learner = _learn_world(
+        small_bench,
+        plan_fn=_forced_plan(adapter=True),
+        min_gain=-1.0,  # promote the identity stub so we control quality
+    )
+    guard = StageGuard(router, guard_cfg)
+    learner.guard = guard
+    learner.trainers["adapter"] = _CountingTrainer()
+    observe = lambda res, rel: guard.observe(res.stage_version, res.tools, rel)
+    # build a rolling window on stage v0 so the promotion gets a baseline
+    _serve(router, small_bench, small_bench.train_idx[:40], observe)
+    report = learner.step()
+    assert report.decisions["adapter"].action == "promoted"
+    promoted_v = report.stage_version
+    assert guard.check().action in ("insufficient_data", "no_baseline", "healthy")
+    # live labels regress hard on the promoted version (simulated bad stage)
+    for _ in range(guard_cfg.min_samples):
+        guard.observe(promoted_v, [0, 1, 2, 3, 4], [59])  # never relevant
+    report = learner.step()
+    assert report.guard.action == "demoted"
+    assert report.guard.restored_version == router.stage_version
+    assert not router.stage_set()[1].has_adapter  # back to the v0 stage set
+    assert report.reason.startswith("cooldown after stage demotion")
+    # the condemned-era window was purged: a retrain from it would pass the
+    # same gate the condemned artifact passed and flap
+    assert len(store) == 0
+    # the registry followed the demotion: the condemned artifact cannot
+    # linger as `latest` (the restored set serves no adapter artifact)
+    assert learner.registry.latest("adapter") is None
+    # cooldown consumed the watermark: no immediate retrain attempt
+    report = learner.step()
+    assert report.decisions["adapter"].action == "below_trigger"
+
+
+def test_stage_guard_handles_out_of_band_promotion(small_bench):
+    """An unannounced set_stages (bypassing the controller) must still get a
+    baseline frozen from its predecessor and be demotable."""
+    db, enc = _db_and_encoder(small_bench)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5
+    )
+    guard = StageGuard(router, StageGuardConfig(min_samples=8, tolerance=0.02))
+    for _ in range(8):
+        guard.observe(0, [0, 1, 2, 3, 4], [0])  # perfect NDCG on v0
+    params = adapter_lib.init_adapter(jax.random.PRNGKey(0))
+    router.set_stages(StageSet(adapter_params=params))  # no note_promotion
+    for _ in range(8):
+        guard.observe(1, [0, 1, 2, 3, 4], [59])  # regressing labels on v1
+    report = guard.check()
+    assert report.action == "demoted" and report.baseline == pytest.approx(1.0)
+    assert guard.demotions and router.stage_version == 2
+
+
+# ------------------------------------------------------------ window plumbing
+
+
+def test_window_fingerprint_tracks_window_content():
+    store = OutcomeStore(n_tools=4, capacity=100)
+    from repro.router.gateway import OutcomeEvent
+
+    fp0 = store.window_fingerprint()
+    store.append(OutcomeEvent(np.array([1, 2]), 1, 1, 0.0))
+    fp1 = store.window_fingerprint()
+    assert fp1 != fp0
+    assert store.window_fingerprint() == fp1  # stable when nothing changes
+    store.clear()
+    assert store.window_fingerprint() not in (fp0, fp1)  # watermark moved on
+
+
+def test_build_train_window_splits_on_positive_rows(small_bench):
+    db, enc = _db_and_encoder(small_bench)
+    store = OutcomeStore(n_tools=len(db), capacity=50_000)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        outcome_sink=store.append,
+    )
+    assert build_train_window(db, store, enc.encode) is None  # empty window
+    _serve(router, small_bench, small_bench.train_idx[:80])
+    window = build_train_window(db, store, enc.encode, min_queries=10)
+    assert window is not None
+    assert len(np.intersect1d(window.train_idx, window.val_idx)) == 0
+    # every held-out gate row carries at least one logged success
+    assert (window.pos_mask[window.val_idx].sum(axis=1) > 0).all()
+    assert window.table_version == db.table_version
+    assert window.fingerprint == store.window_fingerprint()
+
+
+# ------------------------------------------------------- threaded stage churn
+
+
+@pytest.mark.slow
+def test_route_batch_concurrent_with_stage_churn(small_bench):
+    """Scores must stay self-consistent with the reported
+    (table_version, stage_version) while a churn thread promotes/demotes
+    stage sets under live batched serving."""
+    db, enc = _db_and_encoder(small_bench)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
+        stage_history_limit=4,
+    )
+    rng = np.random.default_rng(0)
+    params = adapter_lib.init_adapter(jax.random.PRNGKey(3))
+    params["w2"] = 0.3 * rng.standard_normal(params["w2"].shape).astype(np.float32)
+    adapter_sets = {True: StageSet(adapter_params=params), False: StageSet()}
+    stop = threading.Event()
+    n_churn = [0]
+
+    def churn():
+        # only this thread promotes, so versions are assigned sequentially
+        # and version v carries the adapter iff v is odd (v0 = no adapter)
+        while not stop.is_set():
+            router.set_stages(adapter_sets[n_churn[0] % 2 == 0])
+            n_churn[0] += 1
+
+    queries = [small_bench.query_tokens[i] for i in small_bench.test_idx[:16]]
+    q_emb = enc.encode(queries)
+    q_adapted = adapter_sets[True].adapt_queries(q_emb)
+    table = db.embeddings  # no table churn in this test: isolate the stages
+    t = threading.Thread(target=churn, daemon=True)
+    t.start()
+    try:
+        for _ in range(30):
+            results = router.route_batch(queries)
+            for j, res in enumerate(results):
+                assert res.table_version == 0
+                q = q_adapted[j] if res.stage_version % 2 == 1 else q_emb[j]
+                expect = np.sort(table @ q)[::-1][: len(res.scores)]
+                np.testing.assert_allclose(res.scores, expect, atol=1e-4)
+    finally:
+        stop.set()
+        t.join()
+    assert n_churn[0] > 0
