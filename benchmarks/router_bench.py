@@ -99,6 +99,9 @@ def run(smoke: bool = False, seed: int = 0, out: str = "BENCH_router.json") -> d
     if os.path.dirname(out):
         os.makedirs(os.path.dirname(out), exist_ok=True)
 
+    from repro.analysis.retrace import hot_path_monitor
+    from repro.common.bucketing import expected_buckets
+
     n_queries = 128 if smoke else 600
     tables = {
         "metatool-like": make_metatool_like(seed=seed, n_queries=n_queries),
@@ -108,6 +111,11 @@ def run(smoke: bool = False, seed: int = 0, out: str = "BENCH_router.json") -> d
     seq_requests = 16 if smoke else 64
     rows = []
     by_key = {}
+    # the perf run doubles as the retrace contract check: across the whole
+    # sweep the jitted scorer may compile once per (pow2 bucket x table) —
+    # anything beyond that is a retrace the p99 numbers silently absorbed
+    monitor = hot_path_monitor()
+    monitor.__enter__()
     for name, bench in tables.items():
         router = _build_router(bench)
         queries = list(bench.query_tokens)
@@ -128,6 +136,16 @@ def run(smoke: bool = False, seed: int = 0, out: str = "BENCH_router.json") -> d
                   f"p50={r['p50_ms_per_query']:.3f}ms p99={r['p99_ms_per_query']:.3f}ms "
                   f"qps={r['qps']:.0f}", flush=True)
 
+    monitor.__exit__(None, None, None)
+    # sequential route() serves batches of 1 -> bucket 1, already in the set
+    buckets = expected_buckets(list(batch_sizes) + [1])
+    budget = len(buckets) * len(tables)
+    retrace_violations = monitor.check(
+        {"topk_dense": budget, "adapter_apply": 0, "rerank_topk_scored": 0}
+    )
+    for v in retrace_violations:
+        print(f"RETRACE VIOLATION: {v}", flush=True)
+
     tb = "toolbench-like"
     derived = {
         "speedup_batch64_vs_sequential_2413": (
@@ -138,23 +156,32 @@ def run(smoke: bool = False, seed: int = 0, out: str = "BENCH_router.json") -> d
         "smoke": smoke,
     }
     report = {"bench": "router_serving_path", "rows": rows, "derived": derived}
+    report["retrace"] = {
+        "traces": monitor.traces(),
+        "expected_buckets": buckets,
+        "budget_topk_dense": budget,
+        "violations": retrace_violations,
+        "unsupported": monitor.unsupported,
+    }
     with open(out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"speedup(batch64 vs sequential, {tb}): "
           f"{derived['speedup_batch64_vs_sequential_2413']:.1f}x | "
           f"p99/query at batch 64: {derived['p99_batch64_ms_2413']:.3f}ms "
-          f"(budget {derived['latency_budget_ms']}ms) -> {out}")
+          f"(budget {derived['latency_budget_ms']}ms) | "
+          f"retrace: {'VIOLATED' if retrace_violations else 'ok'} -> {out}")
     return report
 
 
-def main(argv=None):
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true", help="reduced scale for CI")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_router.json")
     args = ap.parse_args(argv)
-    run(smoke=args.smoke, seed=args.seed, out=args.out)
+    report = run(smoke=args.smoke, seed=args.seed, out=args.out)
+    return 1 if report["retrace"]["violations"] else 0
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

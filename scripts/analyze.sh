@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Convenience wrapper for the invariant analyzer (all three legs).
+#
+#   bash scripts/analyze.sh            # human-readable lint + retrace + lockgraph
+#   bash scripts/analyze.sh --json     # machine-readable lint output (for tooling)
+#   bash scripts/analyze.sh --lint     # static lint only (fastest)
+#
+# Extra args after the mode flag are forwarded to the lint CLI, e.g.
+#   bash scripts/analyze.sh --lint --rule cas-discipline -v
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+mode="full"
+case "${1:-}" in
+  --json) mode="json"; shift ;;
+  --lint) mode="lint"; shift ;;
+esac
+
+case "$mode" in
+  json)
+    exec python -m repro.analysis src --json "$@"
+    ;;
+  lint)
+    exec python -m repro.analysis src "$@"
+    ;;
+  full)
+    python -m repro.analysis src "$@"
+    python -m repro.analysis.retrace --smoke
+    python -m repro.analysis.lockgraph --smoke
+    ;;
+esac

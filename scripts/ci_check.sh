@@ -23,8 +23,22 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# invariant analyzer first: the three checks are seconds, the suite is
+# minutes — fail fast on a broken invariant before paying for the tests.
+# (1) repo-specific lint: fails on any finding not grandfathered in
+#     analysis_baseline.json or suppressed with `# repro: noqa[rule-id]`
+python -m repro.analysis src
+# (2) runtime retrace detector: hot-path jits must compile once per
+#     power-of-two bucket, never per distinct batch size
+python -m repro.analysis.retrace --smoke
+# (3) lock-order checker: no acquisition cycles, no JAX dispatch while a
+#     plane lock is held, across a threaded serve/swap/churn scenario
+python -m repro.analysis.lockgraph --smoke
+
 python -m pytest -x -q "$@"
 
+# router_bench also re-checks the retrace contract across its full sweep
+# (exit 1 on violation)
 python -m benchmarks.router_bench --smoke --out BENCH_router_smoke.json
 
 python -m benchmarks.control_bench --smoke --out BENCH_control_smoke.json

@@ -1,0 +1,31 @@
+"""Canonical power-of-two batch bucketing.
+
+Every jitted hot-path entry point pads its leading batch dimension to the
+next power of two so the set of compiled shapes stays logarithmic in the
+largest batch ever seen. This module is the ONE place that arithmetic
+lives — the `pow2-bucket` lint rule flags hand-rolled copies, and the
+retrace detector (`repro.analysis.retrace`) derives its expected-bucket
+set from `expected_buckets`, so a drift here would be caught twice.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List
+
+__all__ = ["pow2_bucket", "pad_amount", "expected_buckets"]
+
+
+def pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n (bucket for a batch of n; n >= 1 -> >= 1)."""
+    if n <= 1:
+        return 1
+    return 1 << (n - 1).bit_length()  # repro: noqa[pow2-bucket]
+
+
+def pad_amount(n: int) -> int:
+    """Rows of padding needed to lift a batch of n into its bucket."""
+    return pow2_bucket(n) - n
+
+
+def expected_buckets(batch_sizes: Iterable[int]) -> List[int]:
+    """Sorted distinct buckets a sweep over `batch_sizes` may compile."""
+    return sorted({pow2_bucket(n) for n in batch_sizes})

@@ -119,6 +119,11 @@ class RefinementController:
         self.clock = clock
         self.refine_fn = refine_fn
         self.reports: List[ControllerReport] = []
+        # the daemon loop's health surface: the most recent step() exception,
+        # cleared by the next successful step — a dashboard/health check polls
+        # this (a failing control plane is otherwise invisible: the thread
+        # survives and reports are easy to miss)
+        self.last_loop_error: Optional[BaseException] = None
         self.n_refinements = 0
         self._seen_events = store.total_ingested  # trigger watermark
         self._last_refine_t = clock()
@@ -260,7 +265,9 @@ class RefinementController:
         """Run `step()` on a daemon thread every `interval_s` seconds.
 
         A failing step is recorded in `self.reports` (reason
-        "step failed: ...") and the loop continues — a transient encoder or
+        "step failed: ...") AND in `self.last_loop_error` (cleared by the
+        next successful step) so a health check can see the failure without
+        scanning reports; the loop continues — a transient encoder or
         refinement error must not silently kill the control plane for the
         rest of the serving process's lifetime.
         """
@@ -271,7 +278,9 @@ class RefinementController:
             while not self._stop.wait(interval_s):
                 try:
                     self.step()
+                    self.last_loop_error = None
                 except Exception as exc:  # survive transient failures
+                    self.last_loop_error = exc
                     self.reports.append(
                         ControllerReport(
                             triggered=False,

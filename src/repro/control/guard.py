@@ -160,15 +160,20 @@ class TableGuard:
                     "regressed_unrestorable", version,
                     ndcg=ndcg, baseline=baseline, n_samples=n,
                 )
-            try:
-                # compare-and-swap: refuse to roll back if another swap
-                # landed after we judged `version` — rollback would condemn
-                # a table this window never evaluated
-                restored = self.db.rollback(expect_current=version)
-            except ConflictError:
-                # the condemned table is no longer live; judge the new one
-                # on its own evidence next check
-                return GuardReport("stale", version, ndcg=ndcg, n_samples=n)
+        # rollback runs OUTSIDE the guard lock: it is itself a swap, and the
+        # database fires swap listeners whose index rebuilds may upload to
+        # device — holding _lock across that would stall every observe() for
+        # the duration and nests the guard lock around device dispatch. The
+        # compare-and-swap below still makes the judgement safe: if anything
+        # (another guard thread, a deploy) moved the table after we released
+        # the lock, expect_current refuses the rollback.
+        try:
+            restored = self.db.rollback(expect_current=version)
+        except ConflictError:
+            # the condemned table is no longer live; judge the new one
+            # on its own evidence next check
+            return GuardReport("stale", version, ndcg=ndcg, n_samples=n)
+        with self._lock:
             # the restored table IS the new baseline: no judgement, no flap
             self._baseline[restored] = None
             self._last_version = restored
@@ -181,4 +186,4 @@ class TableGuard:
                 restored_version=restored,
             )
             self.rollbacks.append(report)
-            return report
+        return report

@@ -23,11 +23,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.retrieval import NEG_INF
+
 __all__ = ["topk_sim_pallas", "BLOCK_Q", "BLOCK_T"]
 
 BLOCK_Q = 128
 BLOCK_T = 512
-NEG = -1e30
+# the canonical padding sentinel: the gateway filters selected tools by
+# `score > NEG_INF / 2`, so the kernel's padding mask must use the SAME
+# constant or padded slots could surface as results
+NEG = NEG_INF
 
 
 def _kernel(q_ref, t_ref, vals_out, idx_out, vals_s, idx_s, *, k: int, n_tools: int):

@@ -70,7 +70,10 @@ def build_router(
             for i in range(bench.n_tools)
         ]
         db = ToolsDatabase(records, enc.encode(bench.desc_tokens))
-        db.swap_table(pipe.tool_table)  # the §7.2 deploy step, exercised
+        # the §7.2 deploy step, exercised; the db was constructed just above
+        # so version 0 is the only possible live version — the CAS still
+        # guards against this block ever being reordered after serving starts
+        db.swap_table(pipe.tool_table, expect_current=0)
     router = SemanticRouter(
         db,
         embed_fn=lambda toks: enc.encode_one(toks),

@@ -181,6 +181,10 @@ class LearningController:
         self.clock = clock
         self.plan_fn = plan_fn
         self.reports: List[LearnReport] = []
+        # daemon-loop health surface: most recent step() exception, cleared
+        # by the next successful step (mirrors RefinementController) — a
+        # health check polls this instead of scanning reports
+        self.last_loop_error: Optional[BaseException] = None
         # per-stage trigger watermark: a stage retrains only on fresh
         # evidence (min_new_events ingested since its last training attempt)
         self._seen: Dict[str, int] = {"adapter": 0, "rerank": 0}
@@ -400,7 +404,9 @@ class LearningController:
         """Run `step()` on a daemon thread every `interval_s` seconds.
 
         A failing step is recorded in `self.reports` (reason
-        "step failed: ...") and the loop continues — a transient trainer or
+        "step failed: ...") AND in `self.last_loop_error` (cleared by the
+        next successful step) so a health check can see the failure without
+        scanning reports; the loop continues — a transient trainer or
         encoder error must not silently kill the learning plane for the
         rest of the serving process's lifetime."""
         assert self._thread is None, "learning controller already running"
@@ -410,7 +416,9 @@ class LearningController:
             while not self._stop.wait(interval_s):
                 try:
                     self.step()
+                    self.last_loop_error = None
                 except Exception as exc:  # survive transient failures
+                    self.last_loop_error = exc
                     self.reports.append(
                         LearnReport(plan=None, reason=f"step failed: {exc!r}")
                     )

@@ -145,12 +145,19 @@ class StageGuard:
                     "regressed_unrestorable", version,
                     ndcg=ndcg, baseline=baseline, n_samples=n,
                 )
-            try:
-                restored = self.router.rollback_stages(expect_current=version)
-            except ConflictError:
-                # the condemned stage set is no longer live; judge the new
-                # one on its own evidence next check
-                return StageGuardReport("stale", version, ndcg=ndcg, n_samples=n)
+        # demotion runs OUTSIDE the guard lock: rollback_stages takes the
+        # router's stage lock, and restored stage sets may touch device state
+        # on their next application — holding _lock across that would stall
+        # every observe() and nest the guard lock around router internals.
+        # The compare-and-swap keeps the judgement safe after the release:
+        # a promotion landing in the gap makes expect_current refuse.
+        try:
+            restored = self.router.rollback_stages(expect_current=version)
+        except ConflictError:
+            # the condemned stage set is no longer live; judge the new
+            # one on its own evidence next check
+            return StageGuardReport("stale", version, ndcg=ndcg, n_samples=n)
+        with self._lock:
             # the restored set IS the new baseline: no judgement, no flap
             self._baseline[restored] = None
             self._last_version = restored
@@ -163,4 +170,4 @@ class StageGuard:
                 restored_version=restored,
             )
             self.demotions.append(report)
-            return report
+        return report

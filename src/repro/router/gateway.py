@@ -66,6 +66,7 @@ from typing import Callable, Deque, List, Optional, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.bucketing import pad_amount
 from repro.core import reranker as reranker_lib
 from repro.core.features import OutcomeFeaturizer
 from repro.core.retrieval import NEG_INF
@@ -299,7 +300,7 @@ class SemanticRouter:
         # scheduler's admission batches vary with free slots; a retrace is
         # a multi-ms stall against the 10 ms budget). Pad rows are zero
         # queries whose results are sliced away below.
-        n_pad = (1 << max(n_q - 1, 0).bit_length()) - n_q
+        n_pad = pad_amount(n_q)
         if n_pad:
             q_in = np.concatenate([q, np.zeros((n_pad, q.shape[1]), np.float32)])
             queries_in = list(queries) + [np.zeros(0, np.int64)] * n_pad
