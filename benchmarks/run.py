@@ -26,13 +26,20 @@ import time
 
 def _suite_registry():
     """name -> run(smoke=..., seed=..., out=...) for the subsystem benches."""
-    from benchmarks import control_bench, index_bench, learn_bench, router_bench
+    from benchmarks import (
+        control_bench,
+        index_bench,
+        learn_bench,
+        obs_bench,
+        router_bench,
+    )
 
     return {
         "router": router_bench.run,
         "control": control_bench.run,
         "index": index_bench.run,
         "learn": learn_bench.run,
+        "obs": obs_bench.run,
     }
 
 
@@ -44,7 +51,7 @@ def main(argv=None) -> None:
                     help="deprecated alias for --smoke")
     ap.add_argument("--tables", default="all",
                     help="comma list of paper tables and/or suites "
-                         "(router,control,index,learn)")
+                         "(router,control,index,learn,obs)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     smoke = args.smoke or args.fast

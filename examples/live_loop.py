@@ -48,23 +48,38 @@ from repro.control import (
 from repro.data.benchmarks import make_metatool_like
 from repro.embedding.bag_encoder import BagEncoder
 from repro.metrics.retrieval import ndcg_at_k
+from repro.obs import EventBus, HealthMonitor
 from repro.router.gateway import SemanticRouter
 from repro.router.tooldb import ToolRecord, ToolsDatabase
 
 
-def build_serving_plane(bench, store_capacity=100_000):
+def build_serving_plane(bench, store_capacity=100_000, bus=None):
     enc = BagEncoder(bench.vocab)
     db = ToolsDatabase(
         [ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
          for i in range(bench.n_tools)],
         enc.encode(bench.desc_tokens),
     )
+    if bus is not None:
+        bus.watch_db(db)  # every swap — controller, guard, injected — lands
     store = OutcomeStore(n_tools=len(db), capacity=store_capacity)
     router = SemanticRouter(
         db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
         outcome_sink=store.append,  # every outcome goes straight to the store
+        bus=bus,
     )
     return enc, db, store, router
+
+
+def print_timeline(bus, monitor):
+    """The telemetry plane's view of what the demo just did."""
+    print("\nlifecycle event bus:")
+    for e in bus.events():
+        detail = ", ".join(f"{k}={v}" for k, v in sorted(e.details.items()))
+        print(f"  [{e.seq:3d}] {e.plane:8s} {e.kind:15s} {detail}")
+    snap = monitor.snapshot()
+    print(f"health: {snap['status']} (control planes: "
+          f"{[c['last_loop_error'] for c in snap['control']]})")
 
 
 def serve_window(bench, router, idx, observe=None, batch_size=64):
@@ -92,12 +107,14 @@ def heldout_ndcg(bench, router, n=300):
 # --------------------------------------------------------------- §7.2 (PR 2)
 def run_refine_demo():
     bench = make_metatool_like(n_tools=199, n_queries=2400)
-    enc, db, store, router = build_serving_plane(bench)
-    guard = TableGuard(db, GuardConfig(k=5, min_samples=64, tolerance=0.02))
+    bus = EventBus()
+    enc, db, store, router = build_serving_plane(bench, bus=bus)
+    guard = TableGuard(db, GuardConfig(k=5, min_samples=64, tolerance=0.02),
+                       bus=bus)
     controller = RefinementController(
         db, store, enc.encode, routers=[router],
         config=ControllerConfig(min_events=1500, min_queries=50),
-        guard=guard,
+        guard=guard, bus=bus,
     )
 
     def observe(res, relevant):
@@ -152,6 +169,11 @@ def run_refine_demo():
           f"(good table was {ndcg_good:.3f})")
     assert abs(restored - ndcg_good) < 1e-6, "rollback did not restore the good table"
     print("\nloop closed: outcomes -> refine -> validate -> swap -> monitor -> rollback")
+    print_timeline(bus, HealthMonitor(
+        routers=[router], controllers=[controller],
+        indexes=[router.index], stores=[store], bus=bus,
+    ))
+    assert bus.last("rollback") is not None, "rollback never reached the bus"
 
 
 # --------------------------------------------------------------- §7.3 (PR 4)
@@ -169,13 +191,16 @@ def run_stages_demo():
     # 600 tools puts the adapter in-policy once logs exceed 10K (§7.3), and
     # keeps the re-ranker out-of-policy at every density (|T| > 500)
     bench = make_metatool_like(n_tools=600, n_queries=4000)
-    enc, db, store, router = build_serving_plane(bench)
-    stage_guard = StageGuard(router, StageGuardConfig(k=5, min_samples=64))
+    bus = EventBus()
+    enc, db, store, router = build_serving_plane(bench, bus=bus)
+    stage_guard = StageGuard(router, StageGuardConfig(k=5, min_samples=64),
+                             bus=bus)
     registry = ArtifactRegistry()
     learner = LearningController(
         db, store, router, enc.encode,
         registry=registry, guard=stage_guard,
         config=LearnConfig(min_new_events=1000),
+        bus=bus,
     )
 
     def observe(res, relevant):
@@ -257,6 +282,12 @@ def run_stages_demo():
     assert abs(restored - ndcg_dense) < 1e-6, "demotion did not restore serving"
     print("\nloop closed: outcomes -> density plan -> train -> gate -> "
           "promote -> monitor -> demote")
+    print_timeline(bus, HealthMonitor(
+        routers=[router], controllers=[learner],
+        indexes=[router.index], stores=[store], bus=bus,
+    ))
+    for kind in ("promotion", "stage_swap", "demotion", "cooldown"):
+        assert bus.last(kind) is not None, f"{kind} never reached the bus"
 
 
 if __name__ == "__main__":

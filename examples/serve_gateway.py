@@ -1,7 +1,7 @@
 """Serve a small backend with batched requests through the OATS gateway.
 
   PYTHONPATH=src python examples/serve_gateway.py [--backend {dense,ivf,pallas}]
-      [--num-tools N]
+      [--num-tools N] [--metrics-port PORT] [--trace-export PATH]
 
 Thin wrapper over the production launcher (launch/serve.py): synthetic tool
 DB -> OATS-S1 refinement -> table swap -> route batched requests -> backend
@@ -14,6 +14,17 @@ The flag pair demos the PR 3 index layer end to end, e.g.
 tiles + perturbs the refined 199-tool table to 25k entries
 (`scale_tool_corpus`) and serves it through the IVF coarse-quantized index
 instead of brute force — same gateway, same outcome loop, registry scale.
+
+The telemetry plane (PR 6) rides along:
+
+  python examples/serve_gateway.py --metrics-port 9100
+
+serves `http://127.0.0.1:9100/metrics` (Prometheus text: per-phase
+route_phase_ms histograms, index served/rebuild counters),
+`/health` (JSON tri-state across all planes; 503 when a daemon loop is
+failing), and `/events` (the lifecycle bus: swaps, rollbacks, rebuilds).
+`--trace-export traces.jsonl` writes the sampled route traces on exit —
+render them with `repro-obs traces.jsonl`.
 """
 import argparse
 
@@ -24,9 +35,15 @@ ap.add_argument("--backend", default="dense", choices=("dense", "ivf", "pallas")
                 help="index scorer behind route_batch (repro.index)")
 ap.add_argument("--num-tools", type=int, default=0,
                 help="scale the tool table to this size (0 = native 199)")
+ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                help="serve /metrics + /health + /events on 127.0.0.1:PORT "
+                     "(0 = ephemeral, printed at startup)")
+ap.add_argument("--trace-export", metavar="PATH", default=None,
+                help="write sampled route traces as JSONL on exit "
+                     "(render with `repro-obs PATH`)")
 args = ap.parse_args()
 
-main([
+argv = [
     "--arch", "hymba-1.5b", "--smoke",
     "--stage", "oats-s1",
     "--requests", "16",
@@ -36,4 +53,13 @@ main([
     "--n-queries", "1500",
     "--backend", args.backend,
     "--num-tools", str(args.num_tools),
-])
+]
+if args.metrics_port is not None:
+    argv += ["--metrics-port", str(args.metrics_port)]
+if args.trace_export:
+    # the demo routes only a couple of batches — sample every one so the
+    # exported JSONL has something for `repro-obs` to render (production
+    # keeps launch/serve.py's 1-in-8 default)
+    argv += ["--trace-export", args.trace_export, "--trace-every", "1"]
+
+main(argv)

@@ -46,3 +46,9 @@ python -m benchmarks.control_bench --smoke --out BENCH_control_smoke.json
 python -m benchmarks.index_bench --smoke --out BENCH_index_smoke.json
 
 python -m benchmarks.learn_bench --smoke --out BENCH_learn_smoke.json
+
+# obs_bench gates the telemetry plane: instrumented route_batch must stay
+# within 5% of bare qps, and the threaded lifecycle smoke (serve + swap +
+# guard rollback + stage demotion) must land every lifecycle event on the
+# bus with correct version stamps
+python -m benchmarks.obs_bench --smoke --out BENCH_obs_smoke.json

@@ -1,0 +1,14 @@
+#!/usr/bin/env python
+"""Thin launcher for the telemetry-plane report CLI (repro.obs.report).
+
+  PYTHONPATH=src python scripts/obs_report.py trace.jsonl
+  PYTHONPATH=src python scripts/obs_report.py --health http://127.0.0.1:9100
+
+Identical to the installed `repro-obs` console entry point.
+"""
+import sys
+
+from repro.obs.report import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -87,6 +87,18 @@ thread-discipline
     *Fix*: record ``self.last_loop_error = exc`` (clear on success) where
     health checks look.
 
+obs-discipline
+    *What*: direct ``time.time()``/``time.perf_counter()``/
+    ``time.monotonic()`` or ``print()`` calls in ``router/`` and
+    ``index/``.
+    *Why*: recorded durations must share one monotonic source
+    (wall-clock NTP slew corrupts latency histograms), and a serving
+    process's stdout is not an operator surface — the telemetry plane
+    (metrics/events/health) is.
+    *Fix*: ``repro.obs.clock`` (``perf``/``monotonic``/``wall``/
+    ``duration_ms``); publish operator-facing state to the
+    ``MetricsRegistry``/``EventBus``.
+
 kernel-contract (project rule)
     *What*: a ``kernels/<name>/kernel.py`` without a ``ref.py`` oracle or
     a parity test referencing ``kernels.<name>``; top-K kernels hardcoding

@@ -699,3 +699,44 @@ class KernelContractRule(Rule):
                             f"hardcoded top-K padding sentinel {val:g} in "
                             f"`{sibling}`", self.hint,
                         )
+
+
+@register
+class ObsDisciplineRule(Rule):
+    rule_id = "obs-discipline"
+    description = (
+        "Direct `time.time()`/`time.perf_counter()`/`time.monotonic()` or "
+        "`print()` in the serving-path packages (`router/`, `index/`) — "
+        "timing there must flow through `repro.obs.clock` (one monotonic "
+        "source per recorded duration; wall-clock steps from NTP slew "
+        "corrupt latency histograms) and operator output through the "
+        "telemetry plane (metrics/events), not stdout a serving process "
+        "never reads."
+    )
+    hint = (
+        "use repro.obs.clock (perf/monotonic/wall/duration_ms) for timing "
+        "and the MetricsRegistry/EventBus for operator-facing output"
+    )
+
+    PACKAGES = ("router", "index")
+    FORBIDDEN_TIME = {"time.time", "time.perf_counter", "time.monotonic"}
+
+    def check(self, module: ModuleInfo) -> Iterator[Finding]:
+        if not _in_packages(module.rel, self.PACKAGES):
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted(node.func)
+            if d in self.FORBIDDEN_TIME:
+                yield self.finding(
+                    module, node,
+                    f"`{d}()` in a serving-path package; use the "
+                    f"repro.obs.clock equivalent",
+                )
+            elif d == "print":
+                yield self.finding(
+                    module, node,
+                    "`print()` in a serving-path package; publish to the "
+                    "telemetry plane instead",
+                )

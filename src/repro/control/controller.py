@@ -105,6 +105,7 @@ class RefinementController:
         clock: Callable[[], float] = time.monotonic,
         refine_fn: Callable = refine_with_gate,  # injectable for tests
         indexes: Sequence = (),  # ToolIndexManagers to keep fresh across swaps
+        bus: Optional["EventBus"] = None,  # repro.obs.events lifecycle surface
     ):
         self.db = db
         self.store = store
@@ -118,6 +119,9 @@ class RefinementController:
         self.indexes = list(indexes)
         self.clock = clock
         self.refine_fn = refine_fn
+        # lifecycle events (cooldown, gate_reject, loop_error transitions) go
+        # to the bus; successful swaps reach it via `EventBus.watch_db`
+        self.bus = bus
         self.reports: List[ControllerReport] = []
         # the daemon loop's health surface: the most recent step() exception,
         # cleared by the next successful step — a dashboard/health check polls
@@ -152,6 +156,8 @@ class RefinementController:
                     f"({n_purged} condemned-era events purged)"
                 ),
             )
+            if self.bus is not None:
+                self.bus.publish("cooldown", plane="control", purged=n_purged)
         else:
             report = self._refine_step()
         report.guard = guard_report
@@ -239,6 +245,9 @@ class RefinementController:
         metric = f"{cfg.refine.gate_metric}@{cfg.refine.k}"
         if not accepted:
             base.reason = f"gate rejected: held-out {metric} did not improve"
+            if self.bus is not None:
+                self.bus.publish("gate_reject", plane="control",
+                                 reason=base.reason)
             return base
         try:
             # compare-and-swap: this table was refined FROM version_before;
@@ -278,8 +287,16 @@ class RefinementController:
             while not self._stop.wait(interval_s):
                 try:
                     self.step()
+                    if self.last_loop_error is not None and self.bus is not None:
+                        # transition back to healthy, not one event per step
+                        self.bus.publish("loop_recovered", plane="control",
+                                         controller=type(self).__name__)
                     self.last_loop_error = None
                 except Exception as exc:  # survive transient failures
+                    if self.last_loop_error is None and self.bus is not None:
+                        self.bus.publish("loop_error", plane="control",
+                                         controller=type(self).__name__,
+                                         error=repr(exc))
                     self.last_loop_error = exc
                     self.reports.append(
                         ControllerReport(

@@ -56,7 +56,12 @@ class GuardReport:
 class TableGuard:
     """Rolling per-version retrieval quality monitor over labelled traffic."""
 
-    def __init__(self, db: ToolsDatabase, config: GuardConfig = GuardConfig()):
+    def __init__(
+        self,
+        db: ToolsDatabase,
+        config: GuardConfig = GuardConfig(),
+        bus: Optional["EventBus"] = None,  # repro.obs.events
+    ):
         self.db = db
         self.config = config
         self._ndcg: Dict[int, Deque[float]] = {}
@@ -65,6 +70,7 @@ class TableGuard:
         self._last_version = db.table_version
         self._lock = threading.Lock()
         self.rollbacks: List[GuardReport] = []
+        self.bus = bus
 
     # ------------------------------------------------------------- observing
     def observe(
@@ -186,4 +192,10 @@ class TableGuard:
                 restored_version=restored,
             )
             self.rollbacks.append(report)
+        if self.bus is not None:  # outside the lock, like the rollback itself
+            self.bus.publish(
+                "rollback", plane="control",
+                condemned_version=version, restored_version=restored,
+                ndcg=ndcg, baseline=baseline,
+            )
         return report

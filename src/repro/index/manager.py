@@ -35,15 +35,31 @@ optimization, never a correctness dependency.
 from __future__ import annotations
 
 import threading
-import time
-from typing import Dict, Optional, Tuple
+import time  # time.sleep only; clocks come from repro.obs.clock
+from typing import Dict, Optional, Tuple, Union
 
 import numpy as np
 
 from repro.index.dense import DenseBackend
+from repro.obs import clock
+from repro.obs.metrics import MetricsRegistry, get_registry
 from repro.router.tooldb import ToolsDatabase
 
 __all__ = ["ToolIndexManager"]
+
+
+class _IndexInstruments:
+    """Preresolved metric handles (catalog: `repro.obs` docstring)."""
+
+    def __init__(self, registry: MetricsRegistry):
+        self.registry = registry
+        self.served = {
+            "index": registry.counter("index_served_total", path="index"),
+            "exact": registry.counter("index_served_total", path="exact"),
+        }
+        self.rebuilds = registry.counter("index_rebuilds_total")
+        self.build_failures = registry.counter("index_build_failures_total")
+        self.build_ms = registry.histogram("index_build_ms")
 
 
 def _build_backend(kind: str, table: np.ndarray, table_version: int, **opts):
@@ -61,6 +77,8 @@ class ToolIndexManager:
         backend_opts: Optional[dict] = None,
         async_rebuild: bool = True,
         watch_swaps: bool = True,
+        metrics: Union[MetricsRegistry, bool, None] = None,
+        bus: Optional["EventBus"] = None,  # repro.obs.events
     ):
         from repro.index import BACKENDS  # call-time import: no module cycle
 
@@ -92,6 +110,19 @@ class ToolIndexManager:
             "rebuilds": 0,
             "build_failures": 0,
         }
+        # telemetry mirrors of `stats` + rebuild lifecycle events; the bus
+        # is a plain attribute so launchers can attach one to a manager a
+        # router already built (`manager.bus = bus`)
+        if metrics is False:
+            self._obs: Optional[_IndexInstruments] = None
+        else:
+            registry = metrics if isinstance(metrics, MetricsRegistry) else get_registry()
+            self._obs = _IndexInstruments(registry)
+        self.bus = bus
+        # which path served the calling thread's last topk ("index:<kind>" |
+        # "exact"): thread-local so concurrent batches don't cross-stamp
+        # their traces during a fallback-serving window
+        self._tls = threading.local()
         # fail fast on misconfigured backend_opts: a tiny synchronous
         # validation build surfaces TypeError/ValueError at construction
         # instead of a silent build-failure loop behind the fallback
@@ -134,8 +165,8 @@ class ToolIndexManager:
         retrying it — callers must check the result: False means the exact
         fallback is serving, not the configured backend.
         """
-        deadline = time.monotonic() + timeout_s
-        while time.monotonic() < deadline:
+        deadline = clock.monotonic() + timeout_s
+        while clock.monotonic() < deadline:
             if self.is_fresh():
                 return True
             with self._lock:
@@ -177,6 +208,11 @@ class ToolIndexManager:
             ).start()
 
     def _build(self, version: int, table: np.ndarray) -> None:
+        bus, obs = self.bus, self._obs
+        if bus is not None:
+            bus.publish("rebuild_start", plane="index", version=version,
+                        backend=self.backend_kind)
+        t0 = clock.perf()
         opts = dict(self.backend_opts)
         with self._lock:
             prev = self._backend
@@ -189,14 +225,20 @@ class ToolIndexManager:
             opts["warm_start"] = prev.warm_start_state()
         try:
             backend = _build_backend(self.backend_kind, table, version, **opts)
-        except Exception:
+        except Exception as exc:
             with self._lock:
                 self.stats["build_failures"] += 1
                 self._failed_for = version
                 if self._building_for == version:
                     self._building_for = None
                 self._build_cond.notify_all()
+            if obs is not None:
+                obs.build_failures.inc()
+            if bus is not None:
+                bus.publish("rebuild_failure", plane="index", version=version,
+                            backend=self.backend_kind, error=repr(exc))
             return  # the exact fallback keeps serving
+        build_ms = clock.duration_ms(t0)
         with self._lock:
             # never replace a fresher index with a slower build's older one
             if self._backend is None or self._backend.table_version <= version:
@@ -205,6 +247,12 @@ class ToolIndexManager:
             if self._building_for == version:
                 self._building_for = None
             self._build_cond.notify_all()
+        if obs is not None:
+            obs.rebuilds.inc()
+            obs.build_ms.record(build_ms)
+        if bus is not None:
+            bus.publish("rebuild_finish", plane="index", version=version,
+                        backend=self.backend_kind, build_ms=build_ms)
 
     # ----------------------------------------------------------------- serve
     def topk(
@@ -235,11 +283,21 @@ class ToolIndexManager:
             scores, idx = backend.topk(queries, k, candidate_mask)
             with self._lock:  # counters race under concurrent serving
                 self.stats["served_index"] += 1
+            self._tls.path = f"index:{self.backend_kind}"
+            if self._obs is not None:
+                self._obs.served["index"].inc()
             return scores, idx, version
         scores, idx = self._exact_topk(queries, table, version, k, candidate_mask)
         with self._lock:
             self.stats["served_exact"] += 1
+        self._tls.path = "exact"
+        if self._obs is not None:
+            self._obs.served["exact"].inc()
         return scores, idx, version
+
+    def last_path(self) -> str:
+        """Which path served the calling thread's most recent `topk`."""
+        return getattr(self._tls, "path", "unknown")
 
     def _exact_topk(
         self,

@@ -23,6 +23,7 @@ from repro.data.benchmarks import make_metatool_like, scale_tool_corpus
 from repro.embedding.bag_encoder import BagEncoder
 from repro.models import model as M
 from repro.models.config import reduced
+from repro.obs import EventBus, HealthMonitor, ObsServer, RouteTracer, get_registry
 from repro.router.gateway import SemanticRouter
 from repro.router.latency import measure_latency, percentile_stats
 from repro.router.tooldb import ToolRecord, ToolsDatabase
@@ -35,6 +36,8 @@ def build_router(
     backend: str = "dense",
     num_tools: int = 0,
     seed: int = 0,
+    tracer=None,
+    bus=None,
 ):
     """Gateway over the refined table; `backend` picks the index scorer.
 
@@ -64,12 +67,19 @@ def build_router(
             for i in range(num_tools)
         ]
         db = ToolsDatabase(records, table)  # refined table baked in at scale
+        if bus is not None:
+            bus.watch_db(db)
     else:
         records = [
             ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
             for i in range(bench.n_tools)
         ]
         db = ToolsDatabase(records, enc.encode(bench.desc_tokens))
+        # watch BEFORE the deploy swap: every table move — this one, later
+        # controller swaps, guard rollbacks, out-of-band deploys — must land
+        # on the bus
+        if bus is not None:
+            bus.watch_db(db)
         # the §7.2 deploy step, exercised; the db was constructed just above
         # so version 0 is the only possible live version — the CAS still
         # guards against this block ever being reordered after serving starts
@@ -80,6 +90,8 @@ def build_router(
         embed_batch_fn=enc.encode,  # one encoder call per route_batch
         k=k,
         backend=backend,
+        tracer=tracer,
+        bus=bus,
     )
     # demo timing should reflect the index path, not the mid-build fallback
     if not router.index.wait_ready(timeout_s=300.0):
@@ -112,16 +124,39 @@ def main(argv=None):
                          "recommend_stages density plan decides whether the "
                          "adapter/re-ranker even train, and any promotion "
                          "is held-out-gated and hot-swapped into the router")
+    ap.add_argument("--metrics-port", type=int, default=None, metavar="PORT",
+                    help="serve /metrics (Prometheus), /health (JSON; 503 on "
+                         "a failing daemon loop), and /events on "
+                         "127.0.0.1:PORT (0 = ephemeral port, printed)")
+    ap.add_argument("--trace-every", type=int, default=8,
+                    help="route-trace sampling rate (~1-in-N batches)")
+    ap.add_argument("--trace-export", metavar="PATH", default=None,
+                    help="write sampled route traces as JSONL on exit "
+                         "(render with `repro-obs PATH`)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # telemetry plane: metrics go to the process registry (the router
+    # records into it by default), lifecycle events to one shared bus,
+    # sampled traces to a bounded ring
+    bus = EventBus()
+    tracer = RouteTracer(sample_every=max(args.trace_every, 1), seed=args.seed)
 
     print("== building tool benchmark + OATS control plane ==")
     bench = make_metatool_like(seed=args.seed, n_tools=args.n_tools, n_queries=args.n_queries)
     router, pipe = build_router(
         bench, args.stage, backend=args.backend, num_tools=args.num_tools,
-        seed=args.seed,
+        seed=args.seed, tracer=tracer, bus=bus,
     )
     print(f"== index backend: {args.backend} over {len(router.db)} tools ==")
+
+    monitor = HealthMonitor(routers=[router], indexes=[router.index], bus=bus)
+    obs_server = None
+    if args.metrics_port is not None:
+        obs_server = ObsServer(monitor, get_registry(), bus,
+                               port=args.metrics_port).start()
+        print(f"== obs: http://{obs_server.host}:{obs_server.port}"
+              f"{{/metrics,/health,/events}} ==")
 
     print("== loading backend pool ==")
     cfg = get_config(args.arch)
@@ -171,6 +206,11 @@ def main(argv=None):
     )
     print(f"outcome log: {len(router.outcome_log)} events (feeds the next cron refinement)")
     print(f"index stats: {router.index.stats}")
+    print(f"health: {monitor.snapshot()['status']} | bus events: {bus.counts()}")
+    if args.trace_export:
+        n = tracer.export_jsonl(args.trace_export)
+        print(f"wrote {n} route traces to {args.trace_export} "
+              f"(render: repro-obs {args.trace_export})")
 
     if args.learn:
         from repro.control import OutcomeStore
@@ -182,6 +222,7 @@ def main(argv=None):
         learner = LearningController(
             router.db, store, router, pipe.encoder.encode,
             config=LearnConfig(min_new_events=1, min_queries=10),
+            bus=bus,
         )
         report = learner.step()
         plan = report.plan
@@ -191,6 +232,8 @@ def main(argv=None):
             print(f"  {stage:8s}: {d.action} {d.reason}")
         print(f"live stages: {sorted(report.active) or '(none)'} "
               f"(stage v{report.stage_version})")
+    if obs_server is not None:
+        obs_server.stop()
     return stats
 
 

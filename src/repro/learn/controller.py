@@ -165,6 +165,7 @@ class LearningController:
         clock: Callable[[], float] = time.monotonic,
         # injectable for tests; production keeps the §7.3 decision table
         plan_fn: Callable[[int, int], DeploymentPlan] = recommend_stages,
+        bus: Optional["EventBus"] = None,  # repro.obs.events lifecycle surface
     ):
         self.db = db
         self.store = store
@@ -180,6 +181,9 @@ class LearningController:
         self.routers = list(routers)
         self.clock = clock
         self.plan_fn = plan_fn
+        # lifecycle events (promotion, gate_reject, cooldown, loop_error
+        # transitions); demotions reach the bus via the StageGuard's own bus
+        self.bus = bus
         self.reports: List[LearnReport] = []
         # daemon-loop health surface: most recent step() exception, cleared
         # by the next successful step (mirrors RefinementController) — a
@@ -218,6 +222,8 @@ class LearningController:
                     f"({n_purged} condemned-era events purged)"
                 ),
             )
+            if self.bus is not None:
+                self.bus.publish("cooldown", plane="learn", purged=n_purged)
         else:
             report = self._learn_step()
         report.guard = guard_report
@@ -344,6 +350,9 @@ class LearningController:
                 f"held-out NDCG@{cfg.k} {ndcg_new:.3f} did not beat the live "
                 f"config's {ndcg_cur:.3f} (+{cfg.min_gain})"
             )
+            if self.bus is not None:
+                self.bus.publish("gate_reject", plane="learn", stage=stage,
+                                 reason=decision.reason)
             return decision
         if self.db.table_version != window.table_version:
             # the gate judged this candidate against the window's table
@@ -397,6 +406,10 @@ class LearningController:
             f"{ndcg_cur:.3f} -> {ndcg_new:.3f}, artifact "
             f"{stage}/v{artifact.version})"
         )
+        if self.bus is not None:
+            self.bus.publish("promotion", plane="learn", stage=stage,
+                             from_version=sv, to_version=new_sv,
+                             artifact_version=artifact.version)
         return decision
 
     # ---------------------------------------------------------------- daemon
@@ -416,8 +429,16 @@ class LearningController:
             while not self._stop.wait(interval_s):
                 try:
                     self.step()
+                    if self.last_loop_error is not None and self.bus is not None:
+                        # transition back to healthy, not one event per step
+                        self.bus.publish("loop_recovered", plane="learn",
+                                         controller=type(self).__name__)
                     self.last_loop_error = None
                 except Exception as exc:  # survive transient failures
+                    if self.last_loop_error is None and self.bus is not None:
+                        self.bus.publish("loop_error", plane="learn",
+                                         controller=type(self).__name__,
+                                         error=repr(exc))
                     self.last_loop_error = exc
                     self.reports.append(
                         LearnReport(plan=None, reason=f"step failed: {exc!r}")

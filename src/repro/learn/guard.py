@@ -56,7 +56,12 @@ class StageGuardReport:
 class StageGuard:
     """Rolling per-stage-version quality monitor over labelled traffic."""
 
-    def __init__(self, router, config: StageGuardConfig = StageGuardConfig()):
+    def __init__(
+        self,
+        router,
+        config: StageGuardConfig = StageGuardConfig(),
+        bus: Optional["EventBus"] = None,  # repro.obs.events
+    ):
         self.router = router
         self.config = config
         self._ndcg: Dict[int, Deque[float]] = {}
@@ -64,6 +69,7 @@ class StageGuard:
         self._last_version = router.stage_version
         self._lock = threading.Lock()
         self.demotions: List[StageGuardReport] = []
+        self.bus = bus
 
     # ------------------------------------------------------------- observing
     def observe(
@@ -170,4 +176,10 @@ class StageGuard:
                 restored_version=restored,
             )
             self.demotions.append(report)
+        if self.bus is not None:  # outside the lock, like the demotion itself
+            self.bus.publish(
+                "demotion", plane="learn",
+                condemned_version=version, restored_version=restored,
+                ndcg=ndcg, baseline=baseline,
+            )
         return report

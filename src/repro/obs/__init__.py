@@ -1,0 +1,113 @@
+"""Telemetry plane: low-overhead metrics, route tracing, events, health.
+
+The paper's pitch is a latency budget ("all mechanisms run within
+single-digit millisecond CPU budgets", §5.5); this package makes that
+budget *observable at serve time* instead of only in offline benches, at a
+cost `benchmarks/obs_bench.py` bounds in CI (<5 % of bare `route_batch`
+qps). Four surfaces:
+
+* `repro.obs.metrics` — process-wide `MetricsRegistry` of counters, gauges,
+  and preallocated log-spaced-bucket histograms (O(1) record, bounded
+  memory); Prometheus text exposition + JSON snapshot.
+* `repro.obs.trace` — seeded ~1-in-N sampled `RouteTracer`: per-batch phase
+  spans stamped with versions, JSONL export, rendered by ``repro-obs``
+  (`repro.obs.report`).
+* `repro.obs.events` — bounded `EventBus` the control/learn/index planes
+  publish lifecycle transitions into (replacing scattered prints and
+  write-only attributes).
+* `repro.obs.health` — `HealthMonitor` JSON snapshot (ok/degraded/error)
+  + `ObsServer` HTTP exposition (``/metrics``, ``/health``, ``/events``),
+  wired into `launch/serve.py` behind ``--metrics-port``.
+
+`repro.obs.clock` is the canonical timing module for `router/` and
+`index/` (the `obs-discipline` lint rule enforces it), and
+`repro.obs.summary` is the one percentile implementation
+(`percentile_stats` re-exported from `repro.router.latency` for compat).
+
+Metric catalog (gateway + index layer)
+======================================
+
+route_requests_total (counter)
+    Queries routed, summed over batches.
+route_batches_total (counter)
+    `route_batch` calls served.
+route_phase_ms{phase=embed|adapter|score|rerank|assemble} (histogram)
+    Per-batch wall duration of each serving phase, monotonic clock.
+route_batch_ms (histogram)
+    End-to-end per-batch duration (sum of phases + overhead).
+route_batch_size (histogram)
+    Raw batch sizes (pre pow2 padding).
+route_table_version / route_stage_version (gauge)
+    Versions stamped on the most recent batch.
+route_outcomes_dropped_total (counter)
+    Outcome-ring overwrites in `record_outcome` (undrained router).
+index_served_total{path=index|exact} (counter)
+    Batches served by the built backend vs the exact dense fallback
+    (fallback-serving windows during rebuilds).
+index_rebuilds_total / index_build_failures_total (counter)
+    Index lifecycle outcomes, mirroring `ToolIndexManager.stats`.
+index_build_ms (histogram)
+    Build durations (k-means rebuilds dominate).
+
+Event catalog (kind / plane / required detail stamps)
+=====================================================
+
+swap / control — version
+    Any `ToolsDatabase` version change (via `EventBus.watch_db`): gated
+    controller swaps, guard rollbacks, out-of-band deploys.
+stage_swap / learn — version
+    Any router StageSet change (promotion, demotion, out-of-band).
+rollback / control — condemned_version, restored_version, ndcg, baseline
+    `TableGuard` condemned the live table and restored a retained one.
+demotion / learn — condemned_version, restored_version, ndcg, baseline
+    `StageGuard` condemned the live StageSet.
+promotion / learn — stage, from_version, to_version, artifact_version
+    `LearningController` activated a gated artifact.
+gate_reject / control|learn — stage (learn), reason
+    A trained candidate failed its held-out gate.
+cooldown / control|learn — purged
+    Post-rollback/demotion window purge + trigger reset.
+rebuild_start, rebuild_finish / index — version, backend (+build_ms)
+    Index rebuild lifecycle for one table version.
+rebuild_failure / index — version, backend, error
+    Build raised; the exact fallback keeps serving.
+loop_error / control|learn — controller, error
+    A daemon `step()` raised (`last_loop_error` set).
+loop_recovered / control|learn — controller
+    The next step succeeded (`last_loop_error` cleared).
+outcomes_dropping / serve — dropped
+    A router's outcome ring overflowed for the first time.
+"""
+from repro.obs import clock
+from repro.obs.events import Event, EventBus
+from repro.obs.health import HealthMonitor, ObsServer
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    LogHistogram,
+    MetricsRegistry,
+    default_edges,
+    get_registry,
+)
+from repro.obs.summary import LatencyStats, percentile_stats, stats_from_histogram
+from repro.obs.trace import RouteTrace, RouteTracer, TraceSampler
+
+__all__ = [
+    "clock",
+    "Event",
+    "EventBus",
+    "HealthMonitor",
+    "ObsServer",
+    "Counter",
+    "Gauge",
+    "LogHistogram",
+    "MetricsRegistry",
+    "default_edges",
+    "get_registry",
+    "LatencyStats",
+    "percentile_stats",
+    "stats_from_histogram",
+    "RouteTrace",
+    "RouteTracer",
+    "TraceSampler",
+]

@@ -1,0 +1,102 @@
+"""repro-obs: render route traces (and live health surfaces) for humans.
+
+  PYTHONPATH=src python -m repro.obs.report trace.jsonl
+  repro-obs trace.jsonl                    # installed entry point
+  repro-obs --health http://127.0.0.1:9100 # pretty-print a live /health
+
+Reads the JSONL a `RouteTracer.export_jsonl` wrote (one RouteTrace per
+line) and prints per-phase latency percentiles, the path/bucket mix, and
+the version span of the traced traffic — the offline twin of the
+`/metrics` histograms, with exact per-batch samples instead of bucket
+estimates.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List
+
+from repro.obs.summary import percentile_stats
+
+__all__ = ["render_trace_report", "main"]
+
+
+def _load_jsonl(path: str) -> List[dict]:
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                records.append(json.loads(line))
+    return records
+
+
+def render_trace_report(records: List[dict]) -> str:
+    if not records:
+        return "no traces\n"
+    lines = [f"{len(records)} traces"]
+    tvs = sorted({r["table_version"] for r in records})
+    svs = sorted({r["stage_version"] for r in records})
+    lines.append(
+        f"table versions {tvs[0]}..{tvs[-1]} | stage versions "
+        f"{svs[0]}..{svs[-1]}"
+    )
+    paths: Dict[str, int] = {}
+    buckets: Dict[int, int] = {}
+    for r in records:
+        paths[r["path"]] = paths.get(r["path"], 0) + 1
+        buckets[r["bucket"]] = buckets.get(r["bucket"], 0) + 1
+    lines.append(
+        "paths: " + ", ".join(f"{p}={n}" for p, n in sorted(paths.items()))
+    )
+    lines.append(
+        "buckets: " + ", ".join(f"{b}={n}" for b, n in sorted(buckets.items()))
+    )
+    by_phase: Dict[str, List[float]] = {}
+    for r in records:
+        for name, ms in r["spans"].items():
+            by_phase.setdefault(name, []).append(float(ms))
+    by_phase["total"] = [float(r["total_ms"]) for r in records]
+    lines.append(f"{'phase':10s} {'n':>6s} {'p50_ms':>9s} {'p99_ms':>9s} "
+                 f"{'mean_ms':>9s}")
+    for name, samples in sorted(by_phase.items()):
+        s = percentile_stats(samples)
+        lines.append(
+            f"{name:10s} {s.n:6d} {s.p50_ms:9.3f} {s.p99_ms:9.3f} "
+            f"{s.mean_ms:9.3f}"
+        )
+    return "\n".join(lines) + "\n"
+
+
+def _render_health(url: str) -> str:
+    from urllib.request import urlopen
+
+    try:
+        with urlopen(url.rstrip("/") + "/health", timeout=5) as resp:
+            snap = json.loads(resp.read())
+    except Exception as exc:  # includes 503 (HTTPError) — still health info
+        resp = getattr(exc, "fp", None)
+        if resp is None:
+            return f"unreachable: {exc}\n"
+        snap = json.loads(resp.read())
+    return json.dumps(snap, indent=2) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("trace", nargs="?", help="JSONL file from RouteTracer.export_jsonl")
+    ap.add_argument("--health", metavar="URL",
+                    help="pretty-print a live ObsServer /health instead")
+    args = ap.parse_args(argv)
+    if args.health:
+        sys.stdout.write(_render_health(args.health))
+        return 0
+    if not args.trace:
+        ap.error("pass a trace JSONL file or --health URL")
+    sys.stdout.write(render_trace_report(_load_jsonl(args.trace)))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -59,9 +59,8 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from collections import OrderedDict, deque
-from typing import Callable, Deque, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, List, Optional, Sequence, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -71,10 +70,36 @@ from repro.core import reranker as reranker_lib
 from repro.core.features import OutcomeFeaturizer
 from repro.core.retrieval import NEG_INF
 from repro.index import ToolIndexManager
+from repro.obs import clock
+from repro.obs.metrics import MetricsRegistry, get_registry
 from repro.router.stages import StageSet
 from repro.router.tooldb import ConflictError, ToolsDatabase
 
 __all__ = ["RouteResult", "OutcomeEvent", "SemanticRouter", "StageSet"]
+
+PHASES = ("embed", "adapter", "score", "rerank", "assemble")
+
+
+class _GatewayInstruments:
+    """The gateway's metric handles, resolved once at construction.
+
+    Instrument lookup is a dict hit in MetricsRegistry but still costs a
+    lock; the hot path must touch preresolved objects only. Catalog:
+    `repro.obs` package docstring."""
+
+    def __init__(self, registry: MetricsRegistry):
+        self.registry = registry
+        self.requests = registry.counter("route_requests_total")
+        self.batches = registry.counter("route_batches_total")
+        self.batch_ms = registry.histogram("route_batch_ms")
+        self.batch_size = registry.histogram("route_batch_size")
+        self.phase = {
+            name: registry.histogram("route_phase_ms", phase=name)
+            for name in PHASES
+        }
+        self.table_version = registry.gauge("route_table_version")
+        self.stage_version = registry.gauge("route_stage_version")
+        self.outcomes_dropped = registry.counter("route_outcomes_dropped_total")
 
 
 @dataclasses.dataclass
@@ -118,6 +143,9 @@ class SemanticRouter:
         backend_opts: Optional[dict] = None,
         stages: Optional[StageSet] = None,
         stage_history_limit: int = 4,
+        metrics: Union[MetricsRegistry, bool, None] = None,
+        tracer: Optional["RouteTracer"] = None,  # repro.obs.trace
+        bus: Optional["EventBus"] = None,  # repro.obs.events
     ):
         self.db = db
         self.embed_fn = embed_fn
@@ -158,9 +186,25 @@ class SemanticRouter:
         # router built from (backend, backend_opts) — "dense" is the PR 1
         # jitted topk_dense path, numerics unchanged
         self._owns_index = index is None
+        # an owned manager inherits this router's bus at construction so its
+        # very first build publishes rebuild events (attaching a bus after
+        # the fact races the constructor's async build thread); a shared
+        # manager keeps whatever bus its creator wired
         self.index = index if index is not None else ToolIndexManager(
-            db, backend=backend, backend_opts=backend_opts
+            db, backend=backend, backend_opts=backend_opts, bus=bus
         )
+        # telemetry: metrics default ON against the process registry
+        # (`benchmarks/obs_bench.py` bounds the cost in CI at <5 % of bare
+        # qps); `metrics=False` is the truly bare hot path the bench
+        # compares against. Instruments are resolved once here so
+        # `route_batch` never takes the registry lock.
+        if metrics is False:
+            self._obs: Optional[_GatewayInstruments] = None
+        else:
+            registry = metrics if isinstance(metrics, MetricsRegistry) else get_registry()
+            self._obs = _GatewayInstruments(registry)
+        self._tracer = tracer
+        self._bus = bus
 
     def close(self) -> None:
         """Tear down a retiring router (idempotent).
@@ -216,7 +260,12 @@ class SemanticRouter:
                 self._stage_history.popitem(last=False)
             self._stages = stages
             self._stage_version += 1
-            return self._stage_version
+            version = self._stage_version
+        # publish outside the stage lock: subscribers must never be able to
+        # stall a promotion racing the serving path's stage_set() read
+        if self._bus is not None:
+            self._bus.publish("stage_swap", plane="learn", version=version)
+        return version
 
     def retained_stage_versions(self) -> List[int]:
         """Stage versions available as demotion targets, oldest first."""
@@ -256,7 +305,13 @@ class SemanticRouter:
                 del self._stage_history[v]
             self._stages = stages
             self._stage_version += 1
-            return self._stage_version
+            version = self._stage_version
+        if self._bus is not None:
+            self._bus.publish(
+                "stage_swap", plane="learn", version=version,
+                restored_version=to_version,
+            )
+        return version
 
     # ---------------------------------------------------------- serving path
     def _embed_batch(self, queries: Sequence[np.ndarray]) -> np.ndarray:
@@ -280,7 +335,7 @@ class SemanticRouter:
         candidate mask admitting fewer than k tools yields a correspondingly
         shorter tools/scores list (never masked-out ids).
         """
-        t0 = time.perf_counter()
+        t0 = clock.perf()
         n_q = len(queries)
         if n_q == 0:
             return []
@@ -288,7 +343,11 @@ class SemanticRouter:
         # cannot mix stage configurations within the batch, and the reported
         # stage_version is the set that actually produced the scores
         stage_version, stages = self.stage_set()
+        obs = self._obs
+        tracing = self._tracer is not None and self._tracer.sample()
+        timed = tracing or obs is not None
         q = self._embed_batch(queries)  # [Q, D]
+        t_embed = clock.perf() if timed else 0.0
         # swap_table asserts the table shape is invariant, so the tool count
         # is stable across versions and safe to read without a snapshot
         n_t = len(self.db)
@@ -317,6 +376,7 @@ class SemanticRouter:
         # pool_selector below keeps seeing the raw encoder embedding `q`:
         # pool affinity must not flip on stage promotions/demotions.
         q_in = stages.adapt_queries(q_in)
+        t_adapter = clock.perf() if timed else 0.0
         # the index layer scores the batch against an atomic (version, table)
         # snapshot — the reported table_version and the scores come from the
         # SAME table even if swap_table lands mid-batch, whichever backend
@@ -324,6 +384,7 @@ class SemanticRouter:
         cand_scores_np, cand_idx_np, table_version = self.index.topk(
             q_in, c, masks_in
         )
+        t_score = clock.perf() if timed else 0.0
         if rerank:
             feats = stages.featurizer.features(q_in, queries_in, cand_idx_np, cand_scores_np)
             top_idx, top_scores = reranker_lib.rerank_topk_scored(
@@ -337,7 +398,8 @@ class SemanticRouter:
             top_idx, top_scores = cand_idx_np[:, :k_eff], cand_scores_np[:, :k_eff]
         top_idx = np.asarray(top_idx)[:n_q]
         top_scores = np.asarray(top_scores)[:n_q]
-        latency_ms = (time.perf_counter() - t0) * 1e3 / n_q
+        t_rank = clock.perf()
+        latency_ms = (t_rank - t0) * 1e3 / n_q
         out = []
         for j in range(n_q):
             # a mask can leave fewer than k candidates; those slots carry the
@@ -354,6 +416,39 @@ class SemanticRouter:
                     stage_version=stage_version,
                 )
             )
+        if timed:
+            t_done = clock.perf()
+            # the rerank span only exists when the Stage-2 MLP actually ran;
+            # recording ~0 ms slice-only "reranks" would poison the p50
+            spans = [
+                ("embed", (t_embed - t0) * 1e3),
+                ("adapter", (t_adapter - t_embed) * 1e3),
+                ("score", (t_score - t_adapter) * 1e3),
+            ]
+            if rerank:
+                spans.append(("rerank", (t_rank - t_score) * 1e3))
+            spans.append(("assemble", (t_done - t_rank) * 1e3))
+            total_ms = (t_done - t0) * 1e3
+            if obs is not None:
+                obs.requests.inc(n_q)
+                obs.batches.inc()
+                obs.batch_size.record(float(n_q))
+                obs.batch_ms.record(total_ms)
+                phase = obs.phase
+                for name, ms in spans:
+                    phase[name].record(ms)
+                obs.table_version.set(table_version)
+                obs.stage_version.set(stage_version)
+            if tracing:
+                self._tracer.record(
+                    batch_size=n_q,
+                    bucket=n_q + n_pad,
+                    path=self.index.last_path(),
+                    table_version=table_version,
+                    stage_version=stage_version,
+                    spans=spans,
+                    total_ms=total_ms,
+                )
         return out
 
     def route(
@@ -371,16 +466,26 @@ class SemanticRouter:
             query_tokens=query_tokens,
             tool_id=tool_id,
             outcome=int(outcome),
-            timestamp=time.time(),
+            timestamp=clock.wall(),
         )
         if self.outcome_sink is not None:
             self.outcome_sink(event)
             return
+        n_dropped = 0
         with self._outcome_lock:
             if len(self.outcome_log) >= self.outcome_capacity:
                 self.outcome_log.popleft()
                 self.outcomes_dropped += 1
+                n_dropped = self.outcomes_dropped
             self.outcome_log.append(event)
+        if n_dropped:
+            # counter + bus outside the ring lock: telemetry must not extend
+            # the record/drain critical section
+            if self._obs is not None:
+                self._obs.outcomes_dropped.inc()
+            if self._bus is not None and n_dropped == 1:
+                self._bus.publish("outcomes_dropping", plane="serve",
+                                  dropped=n_dropped)
 
     def drain_outcomes(self) -> List[OutcomeEvent]:
         """Hand the accumulated log to the offline refinement job."""

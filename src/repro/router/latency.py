@@ -5,42 +5,19 @@ embedding computation, similarity search, and any re-ranking overhead —
 exactly the paper's protocol. The embedding forward uses the MiniLM-shaped
 22M-parameter transformer (repro.embedding.transformer), so the dominant cost
 term matches the production router's, independent of weight values.
+
+The percentile math itself lives in `repro.obs.summary` (one implementation
+shared by this harness, the benchmarks, and the tracer report);
+`LatencyStats`/`percentile_stats` are re-exported here for compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, List
 
-import numpy as np
+from repro.obs import clock
+from repro.obs.summary import LatencyStats, percentile_stats
 
 __all__ = ["LatencyStats", "measure_latency", "percentile_stats"]
-
-
-@dataclasses.dataclass
-class LatencyStats:
-    p50_ms: float
-    p99_ms: float
-    mean_ms: float
-    n: int
-
-    def as_dict(self) -> Dict[str, float]:
-        return {
-            "p50_ms": self.p50_ms,
-            "p99_ms": self.p99_ms,
-            "mean_ms": self.mean_ms,
-            "n": self.n,
-        }
-
-
-def percentile_stats(samples_ms: Sequence[float]) -> LatencyStats:
-    arr = np.asarray(samples_ms, dtype=np.float64)
-    return LatencyStats(
-        p50_ms=float(np.percentile(arr, 50)),
-        p99_ms=float(np.percentile(arr, 99)),
-        mean_ms=float(arr.mean()),
-        n=len(arr),
-    )
 
 
 def measure_latency(
@@ -53,7 +30,7 @@ def measure_latency(
         serve_one(i)
     samples: List[float] = []
     for i in range(n_requests):
-        t0 = time.perf_counter()
+        t0 = clock.perf()
         serve_one(i)
-        samples.append((time.perf_counter() - t0) * 1e3)
+        samples.append(clock.duration_ms(t0))
     return percentile_stats(samples)

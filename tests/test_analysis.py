@@ -47,6 +47,7 @@ def test_registry_has_all_rules():
         "lock-dispatch",
         "thread-discipline",
         "kernel-contract",
+        "obs-discipline",
     }
     for rule in REGISTRY.values():
         assert rule.description and rule.hint
@@ -213,6 +214,43 @@ def test_lock_dispatch_ignores_outside_packages_and_nested_defs(tmp_path):
         "        return jnp.asarray(q)\n"
     )
     assert _check(tmp_path, src2, "lock-dispatch", relpath="tools/mod.py") == []
+
+
+def test_obs_discipline_flags_raw_clocks_and_print(tmp_path):
+    src = (
+        "import time\n"
+        "def serve(q):\n"
+        "    t0 = time.perf_counter()\n"
+        "    print('served', q)\n"
+        "    return time.time() - t0\n"
+        "def wait():\n"
+        "    return time.monotonic()\n"
+    )
+    found = _check(tmp_path, src, "obs-discipline", relpath="router/mod.py")
+    assert len(found) == 4
+    found = _check(tmp_path, src, "obs-discipline", relpath="index/mod.py")
+    assert len(found) == 4
+
+
+def test_obs_discipline_allows_clock_module_and_other_packages(tmp_path):
+    src = (
+        "import time\n"
+        "from repro.obs import clock\n"
+        "def serve(q):\n"
+        "    t0 = clock.perf()\n"
+        "    time.sleep(0.01)\n"  # sleep is not a clock read
+        "    return clock.duration_ms(t0)\n"
+    )
+    assert _check(tmp_path, src, "obs-discipline", relpath="router/mod.py") == []
+    # the same raw calls OUTSIDE the serving packages are fine (benches,
+    # control-plane cadence clocks, the obs plane itself)
+    src2 = (
+        "import time\n"
+        "def bench():\n"
+        "    print(time.perf_counter())\n"
+    )
+    assert _check(tmp_path, src2, "obs-discipline", relpath="control/mod.py") == []
+    assert _check(tmp_path, src2, "obs-discipline", relpath="obs/clock.py") == []
 
 
 def test_thread_discipline_flags_silent_and_swallowing_loops(tmp_path):
