@@ -7,7 +7,9 @@ scripts/ci_check.sh):
 
 1. **Overhead**: `route_batch` with the full telemetry plane attached
    (MetricsRegistry histograms + counters + gauges, 1-in-64 sampled
-   RouteTracer, EventBus) must stay within ``OVERHEAD_BUDGET`` (5 %) of the
+   RouteTracer, EventBus, per-batch QualityMonitor drift/score-gap
+   collection, and a live TimeSeriesRing + SLOEngine judging on a 0.5 s
+   cadence) must stay within ``OVERHEAD_BUDGET`` (5 %) of the
    truly bare router (`metrics=False`, no tracer, no bus) on qps. Bare and
    instrumented routers serve identical query blocks in interleaved rounds
    (alternating order, median-of-rounds ratio) so CPU frequency drift and
@@ -43,7 +45,7 @@ REQUIRED_EVENTS = (
 )
 
 
-def _build_router(bench, enc, metrics, tracer=None, bus=None):
+def _build_router(bench, enc, metrics, tracer=None, bus=None, quality=None):
     from repro.index import ToolIndexManager
     from repro.router.gateway import SemanticRouter
     from repro.router.tooldb import ToolRecord, ToolsDatabase
@@ -55,10 +57,13 @@ def _build_router(bench, enc, metrics, tracer=None, bus=None):
     )
     if bus is not None:
         bus.watch_db(db)
+    if quality is not None:
+        quality.watch_db(db)
     index = ToolIndexManager(db, backend="dense", metrics=metrics, bus=bus)
     router = SemanticRouter(
         db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
         index=index, metrics=metrics, tracer=tracer, bus=bus,
+        quality=quality,
     )
     return db, router
 
@@ -73,13 +78,29 @@ def _timed_qps(router, blocks, n_calls: int) -> float:
 
 
 def run_overhead(bench, enc, smoke: bool, seed: int) -> dict:
-    from repro.obs import EventBus, MetricsRegistry, RouteTracer, stats_from_histogram
+    from repro.obs import (
+        EventBus,
+        MetricsRegistry,
+        QualityMonitor,
+        RouteTracer,
+        SLOEngine,
+        TimeSeriesRing,
+        stats_from_histogram,
+    )
 
     registry = MetricsRegistry()
     tracer = RouteTracer(sample_every=TRACE_EVERY, seed=seed)
     bus = EventBus()
+    # the instrumented side carries the FULL telemetry plane, judgement layer
+    # included: per-batch quality/drift collection in route_batch, plus a
+    # live TimeSeriesRing cadence evaluating the SLO engine concurrently —
+    # the production shape launch/serve.py wires behind --metrics-port
+    quality = QualityMonitor(registry=registry, bus=bus)
     _, bare = _build_router(bench, enc, metrics=False)
-    _, inst = _build_router(bench, enc, metrics=registry, tracer=tracer, bus=bus)
+    _, inst = _build_router(bench, enc, metrics=registry, tracer=tracer,
+                            bus=bus, quality=quality)
+    ring = TimeSeriesRing(registry, bus=bus)
+    engine = SLOEngine(ring, bus=bus, registry=registry)
 
     blocks = [
         [bench.query_tokens[qi] for qi in bench.train_idx[lo : lo + BATCH]]
@@ -90,6 +111,9 @@ def run_overhead(bench, enc, smoke: bool, seed: int) -> dict:
     for r in (bare, inst):  # jit warmup + instrument touch, off the clock
         _timed_qps(r, blocks, 3)
 
+    # judgement cadence runs for the whole measurement: every 0.5 s the ring
+    # snapshots the registry and the engine judges all four default SLOs
+    ring.start(interval_s=0.5, on_tick=lambda _r: engine.evaluate())
     ratios, qps_bare_all, qps_inst_all = [], [], []
     for rnd in range(rounds):
         # alternate order per round: frequency drift hits both sides equally
@@ -102,6 +126,10 @@ def run_overhead(bench, enc, smoke: bool, seed: int) -> dict:
         ratios.append(qps_inst / qps_bare)
         qps_bare_all.append(qps_bare)
         qps_inst_all.append(qps_inst)
+    ring.stop()
+    if ring.last_loop_error is not None:
+        raise SystemExit(f"ring daemon flapped during the overhead "
+                         f"measurement: {ring.last_loop_error}")
     # gate on peak-vs-peak: external contention only ever *subtracts* qps,
     # so the best round on each side is the least contaminated estimate of
     # what the code can do (a one-sided noisy patch skews even a median of
@@ -131,6 +159,9 @@ def run_overhead(bench, enc, smoke: bool, seed: int) -> dict:
         "n_traces": len(tracer),
         "phase_ms": phases,
         "batch_ms": total,
+        "ring_points": len(ring),
+        "slo_burning": engine.burning(),
+        "drift_batches": quality.summary()["n_batches"],
     }
     print(f"overhead: bare {row['qps_bare_peak']:.0f} qps vs instrumented "
           f"{row['qps_instrumented_peak']:.0f} qps (peak-of-rounds) -> "

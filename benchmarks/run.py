@@ -32,6 +32,7 @@ def _suite_registry():
         learn_bench,
         obs_bench,
         router_bench,
+        slo_bench,
     )
 
     return {
@@ -40,6 +41,7 @@ def _suite_registry():
         "index": index_bench.run,
         "learn": learn_bench.run,
         "obs": obs_bench.run,
+        "slo": slo_bench.run,
     }
 
 
@@ -51,7 +53,7 @@ def main(argv=None) -> None:
                     help="deprecated alias for --smoke")
     ap.add_argument("--tables", default="all",
                     help="comma list of paper tables and/or suites "
-                         "(router,control,index,learn,obs)")
+                         "(router,control,index,learn,obs,slo)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     smoke = args.smoke or args.fast

@@ -1,0 +1,368 @@
+"""SLO + quality-observability smoke: burn-rate alerts and drift detection
+fire end-to-end, with correct stamps, against live serving traffic.
+
+  PYTHONPATH=src python -m benchmarks.slo_bench [--smoke] [--out BENCH_slo.json]
+
+Two threaded scenarios, both enforced with SystemExit (CI smoke-runs this
+via scripts/ci_check.sh):
+
+1. **Burn**: a serving thread routes batches while a second-scale latency
+   SLO (10 ms threshold, the paper's budget) is evaluated on a real
+   `TimeSeriesRing` cadence. Injected embed latency pushes every batch past
+   the threshold: the engine must publish ``slo_burn`` (with threshold,
+   live p99, and a resolvable p99 trace exemplar), ``/slo`` must report the
+   SLO burning, ``/health`` must degrade — and removing the latency must
+   publish ``slo_recovered`` and return ``/health`` to ok. The ring daemon
+   must finish with ``last_loop_error`` clean.
+
+2. **Drift**: a bad table (row-shuffled AND mean-shifted — a pure shuffle
+   leaves the population stats the drift detector compares against
+   unchanged) is swapped under live traffic. The label-free
+   ``quality_drift`` event must land BEFORE the labelled `TableGuard`
+   rollback (strictly smaller bus seq) with the condemned version stamped,
+   and the detector must re-arm once the rollback restores a good table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+BATCH = 16
+TICK_S = 0.25  # ring cadence: every tick also evaluates the SLO engine
+SLOW_EMBED_S = 0.015  # injected per-batch embed latency (> the 10 ms budget)
+
+
+def _build_router(bench, enc, registry, tracer=None, bus=None, quality=None,
+                  embed_batch_fn=None):
+    from repro.index import ToolIndexManager
+    from repro.router.gateway import SemanticRouter
+    from repro.router.tooldb import ToolRecord, ToolsDatabase
+
+    db = ToolsDatabase(
+        [ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
+         for i in range(bench.n_tools)],
+        enc.encode(bench.desc_tokens),
+    )
+    if bus is not None:
+        bus.watch_db(db)
+    if quality is not None:
+        quality.watch_db(db)
+    index = ToolIndexManager(db, backend="dense", metrics=registry, bus=bus)
+    router = SemanticRouter(
+        db, embed_fn=enc.encode_one,
+        embed_batch_fn=embed_batch_fn or enc.encode, k=5,
+        index=index, metrics=registry, tracer=tracer, bus=bus,
+        quality=quality,
+    )
+    return db, router
+
+
+def _serve_thread(router, blocks):
+    """Route batches on a daemon thread until stopped; surfaces exceptions."""
+    stop = threading.Event()
+    errors = []
+
+    def loop():
+        i = 0
+        try:
+            while not stop.is_set():
+                router.route_batch(blocks[i % len(blocks)])
+                i += 1
+        except Exception as exc:
+            errors.append(exc)
+
+    t = threading.Thread(target=loop, name="slo-smoke-serve", daemon=True)
+    t.start()
+    return stop, t, errors
+
+
+def _wait_for(pred, timeout_s: float, what: str):
+    """Poll `pred` until truthy; SystemExit with `what` on timeout."""
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        v = pred()
+        if v:
+            return v
+        time.sleep(0.05)
+    raise SystemExit(f"timed out after {timeout_s:.0f}s waiting for {what}")
+
+
+def _fetch(url: str):
+    from urllib.error import HTTPError
+    from urllib.request import urlopen
+
+    try:
+        with urlopen(url, timeout=5) as resp:
+            return resp.status, json.loads(resp.read())
+    except HTTPError as exc:  # 503 /health still carries the snapshot
+        return exc.code, json.loads(exc.fp.read())
+
+
+def run_burn(bench, enc, smoke: bool, seed: int) -> dict:
+    """Scenario 1: latency injection -> slo_burn -> recovery -> slo_recovered."""
+    from repro.obs import (
+        SLO,
+        BurnWindow,
+        EventBus,
+        HealthMonitor,
+        MetricsRegistry,
+        ObsServer,
+        QualityMonitor,
+        RouteTracer,
+        SLOEngine,
+        TimeSeriesRing,
+    )
+
+    registry = MetricsRegistry()
+    bus = EventBus()
+    tracer = RouteTracer(sample_every=1, seed=seed)
+    quality = QualityMonitor(registry=registry, bus=bus)
+
+    delay = {"s": 0.0}  # mutable latency injection knob, read per batch
+
+    def slow_embed(tokens):
+        if delay["s"]:
+            time.sleep(delay["s"])
+        return enc.encode(tokens)
+
+    db, router = _build_router(
+        bench, enc, registry, tracer=tracer, bus=bus, quality=quality,
+        embed_batch_fn=slow_embed,
+    )
+    # second-scale windows; objective 0.90 (not the production 0.99) so a
+    # stray slow batch on a noisy CI host needs >10% of the window to burn
+    slo = SLO(
+        name="route_latency_budget",
+        kind="latency",
+        description="smoke-scale: 90% of batches inside the 10 ms budget",
+        hist_key="route_batch_ms",
+        threshold_ms=10.0,
+        objective=0.90,
+        windows=(BurnWindow(long_s=2.0, short_s=0.6, factor=1.0),),
+    )
+    ring = TimeSeriesRing(registry, bus=bus)
+    engine = SLOEngine(ring, slos=(slo,), bus=bus, registry=registry)
+    monitor = HealthMonitor(routers=[router], bus=bus, slo=engine)
+    server = ObsServer(monitor=monitor, registry=registry, bus=bus,
+                       slo=engine, tracer=tracer).start()
+    base = f"http://{server.host}:{server.port}"
+
+    blocks = [
+        [bench.query_tokens[qi] for qi in bench.train_idx[lo : lo + BATCH]]
+        for lo in range(0, BATCH * 4, BATCH)
+    ]
+    for b in blocks:  # jit warmup off the ring, so the first window is clean
+        router.route_batch(b)
+
+    ring.start(interval_s=TICK_S, on_tick=lambda r: engine.evaluate())
+    stop, t, serve_errors = _serve_thread(router, blocks)
+    try:
+        # healthy window: enough ticks for both windows, no burn
+        time.sleep(1.2)
+        code, snap = _fetch(f"{base}/slo")
+        if code != 200 or snap["status"] != "ok" or snap["burning"]:
+            raise SystemExit(f"healthy traffic already burning: {snap['status']}"
+                             f" burning={snap['burning']}")
+        if bus.last("slo_burn") is not None:
+            raise SystemExit("slo_burn published during the healthy window")
+
+        # breach: every batch now pays >10 ms in embed
+        delay["s"] = SLOW_EMBED_S
+        burn_ev = _wait_for(lambda: bus.last("slo_burn"), 20.0,
+                            "slo_burn after latency injection")
+        code, snap = _fetch(f"{base}/slo")
+        if snap["status"] != "burning" or "route_latency_budget" not in snap["burning"]:
+            raise SystemExit(f"/slo does not report the breach: {snap['status']} "
+                             f"burning={snap['burning']}")
+        entry = snap["slos"]["route_latency_budget"]
+        if entry.get("p99_ms") is None or entry["p99_ms"] <= 10.0:
+            raise SystemExit(f"burning latency SLO without p99 evidence: {entry}")
+        code, health = _fetch(f"{base}/health")
+        if health["status"] != "degraded" or code != 200:
+            raise SystemExit(f"burning SLO did not degrade /health: "
+                             f"{health['status']} (HTTP {code})")
+        if "route_latency_budget" not in health["slo"]["burning"]:
+            raise SystemExit(f"/health slo section missing the burn: {health['slo']}")
+        d = burn_ev.details
+        if d["slo"] != "route_latency_budget" or d["threshold_ms"] != 10.0:
+            raise SystemExit(f"slo_burn mis-stamped: {d}")
+        exemplar = d.get("p99_exemplar")
+        if exemplar is None:
+            raise SystemExit(f"slo_burn carries no p99 exemplar (tracer samples "
+                             f"every batch): {d}")
+        code, trace = _fetch(f"{base}/traces?id={exemplar}")
+        if code != 200 or "spans" not in trace:
+            raise SystemExit(f"p99 exemplar trace #{exemplar} did not resolve "
+                             f"over /traces?id= (HTTP {code})")
+
+        # recovery: fast traffic refills the windows, breach must clear
+        delay["s"] = 0.0
+        _wait_for(lambda: bus.last("slo_recovered"), 25.0,
+                  "slo_recovered after removing the latency")
+        code, health = _fetch(f"{base}/health")
+        if health["status"] != "ok":
+            raise SystemExit(f"/health still {health['status']} after recovery")
+    finally:
+        stop.set()
+        t.join(timeout=30)
+        ring.stop()
+        server.stop()
+
+    if serve_errors:
+        raise SystemExit(f"serving thread failed during the burn smoke: "
+                         f"{serve_errors[0]!r}")
+    if ring.last_loop_error is not None:
+        raise SystemExit(f"ring daemon flapped: {ring.last_loop_error}")
+    rec_ev = bus.last("slo_recovered")
+    row = {
+        "slo": "route_latency_budget",
+        "burn_seq": burn_ev.seq,
+        "recovered_seq": rec_ev.seq,
+        "burn_details": dict(burn_ev.details),
+        "p99_exemplar_resolved": int(exemplar),
+        "ring_points": len(ring),
+        "quality": quality.summary(),
+    }
+    print(f"burn: slo_burn seq={burn_ev.seq} "
+          f"(p99={d.get('p99_ms', float('nan')):.2f}ms, exemplar trace "
+          f"#{exemplar}) -> slo_recovered seq={rec_ev.seq} | "
+          f"{row['ring_points']} ring points", flush=True)
+    router.close()
+    return row
+
+
+def run_drift(bench, enc, smoke: bool, seed: int) -> dict:
+    """Scenario 2: bad swap -> label-free quality_drift BEFORE the rollback."""
+    from repro.control import GuardConfig, TableGuard
+    from repro.obs import EventBus, MetricsRegistry, QualityMonitor
+
+    registry = MetricsRegistry()
+    bus = EventBus()
+    quality = QualityMonitor(registry=registry, bus=bus)
+    db, router = _build_router(bench, enc, registry, bus=bus, quality=quality)
+    guard = TableGuard(db, GuardConfig(min_samples=32), bus=bus)
+
+    blocks = [
+        [bench.query_tokens[qi] for qi in bench.train_idx[lo : lo + BATCH]]
+        for lo in range(0, BATCH * 4, BATCH)
+    ]
+    stop, t, serve_errors = _serve_thread(router, blocks)
+    try:
+        # healthy window: drift detector warms past min_batches, guard
+        # collects a labelled baseline on v0
+        v0 = db.table_version
+        _wait_for(lambda: quality.summary()["n_batches"]
+                  >= quality.config.drift_min_batches + 2,
+                  10.0, "drift detector warmup batches")
+        for _ in range(40):
+            guard.observe(v0, [1, 2, 3], [1])
+        if quality.drifting:
+            raise SystemExit("drift latch set on healthy traffic")
+
+        # bad swap: shuffle breaks per-tool geometry (what the *labels* will
+        # catch); the mean shift moves the population stats (what the
+        # label-free detector catches immediately)
+        rng = np.random.default_rng(seed)
+        bad = db.embeddings.copy()
+        rng.shuffle(bad, axis=0)
+        bad += 3.0 * bad.std()
+        v_bad = db.swap_table(bad, expect_current=v0)
+
+        drift_ev = _wait_for(lambda: bus.last("quality_drift"), 10.0,
+                             "quality_drift after the bad swap")
+        guard.check()  # unannounced swap: baseline frozen from v0's window
+        for _ in range(40):
+            guard.observe(v_bad, [1, 2, 3], [9])
+        report = guard.check()
+        if report.action != "rolled_back":
+            raise SystemExit(f"guard did not roll back the bad table: "
+                             f"{report.action}")
+        v_restored = db.table_version
+
+        # re-arm: the restored table's stats match the traffic again
+        _wait_for(lambda: not quality.drifting, 10.0,
+                  "drift latch re-arm after rollback")
+    finally:
+        stop.set()
+        t.join(timeout=30)
+
+    if serve_errors:
+        raise SystemExit(f"serving thread failed during the drift smoke: "
+                         f"{serve_errors[0]!r}")
+    rollback_ev = bus.last("rollback")
+    if rollback_ev is None:
+        raise SystemExit("rollback event never reached the bus")
+    if drift_ev.seq >= rollback_ev.seq:
+        raise SystemExit(
+            f"label-free drift (seq {drift_ev.seq}) did not precede the "
+            f"labelled rollback (seq {rollback_ev.seq})"
+        )
+    dd = drift_ev.details
+    if dd["table_version"] != v_bad or dd["score"] <= dd["threshold"]:
+        raise SystemExit(f"quality_drift mis-stamped: {dd} (bad table v{v_bad})")
+    rd = rollback_ev.details
+    if (rd["condemned_version"] != v_bad
+            or rd["restored_version"] != v_restored):
+        raise SystemExit(f"rollback mis-stamped: {rd} "
+                         f"(condemned v{v_bad}, restored v{v_restored})")
+    row = {
+        "drift_seq": drift_ev.seq,
+        "rollback_seq": rollback_ev.seq,
+        "lead_events": rollback_ev.seq - drift_ev.seq,
+        "drift_details": dict(dd),
+        "rollback_details": dict(rd),
+        "rearmed": not quality.drifting,
+        "quality": quality.summary(),
+    }
+    print(f"drift: quality_drift seq={drift_ev.seq} "
+          f"(score={dd['score']:.2f} vs {dd['threshold']:.2f}) preceded "
+          f"rollback seq={rollback_ev.seq} by {row['lead_events']} events | "
+          f"re-armed={row['rearmed']}", flush=True)
+    router.close()
+    return row
+
+
+def run(smoke: bool = False, seed: int = 0, out: str = "BENCH_slo.json") -> dict:
+    from repro.data.benchmarks import make_metatool_like
+    from repro.embedding.bag_encoder import BagEncoder
+
+    if os.path.dirname(out):
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+
+    bench = make_metatool_like(seed=seed, n_tools=64 if smoke else 199,
+                               n_queries=256 if smoke else 600)
+    enc = BagEncoder(bench.vocab)
+    burn = run_burn(bench, enc, smoke, seed)
+    drift = run_drift(bench, enc, smoke, seed)
+    report = {
+        "bench": "slo_quality",
+        "burn": burn,
+        "drift": drift,
+        "derived": {
+            "burn_to_recovery_events": burn["recovered_seq"] - burn["burn_seq"],
+            "drift_lead_events": drift["lead_events"],
+            "smoke": smoke,
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"slo smoke: burn+recovery and drift-before-rollback verified -> {out}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced scale for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_slo.json")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, seed=args.seed, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

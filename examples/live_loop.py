@@ -48,12 +48,12 @@ from repro.control import (
 from repro.data.benchmarks import make_metatool_like
 from repro.embedding.bag_encoder import BagEncoder
 from repro.metrics.retrieval import ndcg_at_k
-from repro.obs import EventBus, HealthMonitor
+from repro.obs import EventBus, HealthMonitor, QualityMonitor
 from repro.router.gateway import SemanticRouter
 from repro.router.tooldb import ToolRecord, ToolsDatabase
 
 
-def build_serving_plane(bench, store_capacity=100_000, bus=None):
+def build_serving_plane(bench, store_capacity=100_000, bus=None, quality=None):
     enc = BagEncoder(bench.vocab)
     db = ToolsDatabase(
         [ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
@@ -62,16 +62,19 @@ def build_serving_plane(bench, store_capacity=100_000, bus=None):
     )
     if bus is not None:
         bus.watch_db(db)  # every swap — controller, guard, injected — lands
+    if quality is not None:
+        quality.watch_db(db)  # live table stats = the drift reference
     store = OutcomeStore(n_tools=len(db), capacity=store_capacity)
     router = SemanticRouter(
         db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode, k=5,
         outcome_sink=store.append,  # every outcome goes straight to the store
         bus=bus,
+        quality=quality,
     )
     return enc, db, store, router
 
 
-def print_timeline(bus, monitor):
+def print_timeline(bus, monitor, quality=None):
     """The telemetry plane's view of what the demo just did."""
     print("\nlifecycle event bus:")
     for e in bus.events():
@@ -80,6 +83,14 @@ def print_timeline(bus, monitor):
     snap = monitor.snapshot()
     print(f"health: {snap['status']} (control planes: "
           f"{[c['last_loop_error'] for c in snap['control']]})")
+    if quality is not None:
+        q = quality.summary()
+        drift = q["drift_score"]
+        print(f"quality: rolling NDCG@{q['k']}="
+              f"{q['ndcg'] if q['ndcg'] is None else round(q['ndcg'], 3)} "
+              f"over {q['n_labelled']} labels | "
+              f"drift_score={drift if drift is None else round(drift, 3)} "
+              f"({q['drift_events']} drift event(s))")
 
 
 def serve_window(bench, router, idx, observe=None, batch_size=64):
@@ -108,7 +119,8 @@ def heldout_ndcg(bench, router, n=300):
 def run_refine_demo():
     bench = make_metatool_like(n_tools=199, n_queries=2400)
     bus = EventBus()
-    enc, db, store, router = build_serving_plane(bench, bus=bus)
+    quality = QualityMonitor(bus=bus)
+    enc, db, store, router = build_serving_plane(bench, bus=bus, quality=quality)
     guard = TableGuard(db, GuardConfig(k=5, min_samples=64, tolerance=0.02),
                        bus=bus)
     controller = RefinementController(
@@ -119,6 +131,7 @@ def run_refine_demo():
 
     def observe(res, relevant):
         guard.observe(res.table_version, res.tools, relevant)
+        quality.observe(res.tools, relevant)  # the streaming rolling view
 
     print(f"act 1 — streamed outcomes close the refinement loop "
           f"({bench.n_tools} tools, {len(bench.train_idx)} train queries)")
@@ -145,10 +158,12 @@ def run_refine_demo():
     # baseline window for it before anything replaces it
     serve_window(bench, router, bench.test_idx[:300], observe)
 
-    print("\nact 2 — a corrupted table bypasses the gate; the guard rolls it back")
+    print("\nact 2 — a corrupted table bypasses the gate; the drift detector "
+          "flags it label-free, then the guard rolls it back")
     rng = np.random.default_rng(0)
     bad = db.embeddings.copy()
     rng.shuffle(bad, axis=0)  # tool vectors scrambled across tools
+    bad += 3.0 * bad.std()  # and shifted off the query population
     db.swap_table(bad)
     print(f"  injected bad table: v{db.table_version} "
           f"(heldout NDCG@5 = {heldout_ndcg(bench, router):.3f})")
@@ -172,8 +187,14 @@ def run_refine_demo():
     print_timeline(bus, HealthMonitor(
         routers=[router], controllers=[controller],
         indexes=[router.index], stores=[store], bus=bus,
-    ))
-    assert bus.last("rollback") is not None, "rollback never reached the bus"
+    ), quality=quality)
+    rollback_ev = bus.last("rollback")
+    assert rollback_ev is not None, "rollback never reached the bus"
+    drift_ev = bus.last("quality_drift")
+    assert drift_ev is not None, "drift detector never flagged the bad table"
+    assert drift_ev.seq < rollback_ev.seq, (
+        "drift should fire label-free, before the guard's labelled rollback"
+    )
 
 
 # --------------------------------------------------------------- §7.3 (PR 4)

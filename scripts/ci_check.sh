@@ -47,8 +47,16 @@ python -m benchmarks.index_bench --smoke --out BENCH_index_smoke.json
 
 python -m benchmarks.learn_bench --smoke --out BENCH_learn_smoke.json
 
-# obs_bench gates the telemetry plane: instrumented route_batch must stay
-# within 5% of bare qps, and the threaded lifecycle smoke (serve + swap +
-# guard rollback + stage demotion) must land every lifecycle event on the
-# bus with correct version stamps
+# obs_bench gates the telemetry plane: instrumented route_batch (including
+# the SLO judgement layer: quality monitor, ticking TimeSeriesRing, SLO
+# engine) must stay within 5% of bare qps, and the threaded lifecycle smoke
+# (serve + swap + guard rollback + stage demotion) must land every
+# lifecycle event on the bus with correct version stamps
 python -m benchmarks.obs_bench --smoke --out BENCH_obs_smoke.json
+
+# slo_bench gates the judgement layer end-to-end: injected latency past the
+# 10 ms budget must publish slo_burn (with a resolvable p99 trace exemplar)
+# and degrade /health, recovery must publish slo_recovered, and a bad table
+# swap must raise the label-free quality_drift event BEFORE the labelled
+# TableGuard rollback
+python -m benchmarks.slo_bench --smoke --out BENCH_slo_smoke.json

@@ -89,12 +89,12 @@ thread-discipline
 
 obs-discipline
     *What*: direct ``time.time()``/``time.perf_counter()``/
-    ``time.monotonic()`` or ``print()`` calls in ``router/`` and
-    ``index/``.
+    ``time.monotonic()`` or ``print()`` calls in ``router/``, ``index/``,
+    ``control/``, and ``learn/``.
     *Why*: recorded durations must share one monotonic source
-    (wall-clock NTP slew corrupts latency histograms), and a serving
-    process's stdout is not an operator surface — the telemetry plane
-    (metrics/events/health) is.
+    (wall-clock NTP slew corrupts latency histograms and controller
+    cooldown/cadence arithmetic), and a serving process's stdout is not
+    an operator surface — the telemetry plane (metrics/events/health) is.
     *Fix*: ``repro.obs.clock`` (``perf``/``monotonic``/``wall``/
     ``duration_ms``); publish operator-facing state to the
     ``MetricsRegistry``/``EventBus``.

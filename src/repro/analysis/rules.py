@@ -706,19 +706,20 @@ class ObsDisciplineRule(Rule):
     rule_id = "obs-discipline"
     description = (
         "Direct `time.time()`/`time.perf_counter()`/`time.monotonic()` or "
-        "`print()` in the serving-path packages (`router/`, `index/`) — "
-        "timing there must flow through `repro.obs.clock` (one monotonic "
-        "source per recorded duration; wall-clock steps from NTP slew "
-        "corrupt latency histograms) and operator output through the "
-        "telemetry plane (metrics/events), not stdout a serving process "
-        "never reads."
+        "`print()` in the serving-path packages (`router/`, `index/`) and "
+        "the daemon planes (`control/`, `learn/`) — timing there must flow "
+        "through `repro.obs.clock` (one monotonic source per recorded "
+        "duration; wall-clock steps from NTP slew corrupt latency "
+        "histograms and controller cooldown/cadence arithmetic) and "
+        "operator output through the telemetry plane (metrics/events), not "
+        "stdout a serving process never reads."
     )
     hint = (
         "use repro.obs.clock (perf/monotonic/wall/duration_ms) for timing "
         "and the MetricsRegistry/EventBus for operator-facing output"
     )
 
-    PACKAGES = ("router", "index")
+    PACKAGES = ("router", "index", "control", "learn")
     FORBIDDEN_TIME = {"time.time", "time.perf_counter", "time.monotonic"}
 
     def check(self, module: ModuleInfo) -> Iterator[Finding]:

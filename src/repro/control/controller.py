@@ -40,7 +40,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Callable, List, Optional, Sequence
 
 import jax.numpy as jnp
@@ -50,6 +49,7 @@ from repro.core.deployment import DeploymentPlan, recommend_stages, refine_trigg
 from repro.core.refine import RefineConfig, refine_with_gate
 from repro.control.guard import GuardReport, TableGuard
 from repro.control.outcome_store import OutcomeStore
+from repro.obs import clock as obs_clock
 from repro.router.tooldb import ConflictError, ToolsDatabase
 
 __all__ = ["ControllerConfig", "ControllerReport", "RefinementController"]
@@ -102,7 +102,7 @@ class RefinementController:
         routers: Sequence = (),
         config: ControllerConfig = ControllerConfig(),
         guard: Optional[TableGuard] = None,
-        clock: Callable[[], float] = time.monotonic,
+        clock: Callable[[], float] = obs_clock.monotonic,
         refine_fn: Callable = refine_with_gate,  # injectable for tests
         indexes: Sequence = (),  # ToolIndexManagers to keep fresh across swaps
         bus: Optional["EventBus"] = None,  # repro.obs.events lifecycle surface

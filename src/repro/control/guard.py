@@ -22,12 +22,10 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from collections import deque
-from typing import Deque, Dict, Iterable, List, Optional
-
-import numpy as np
+from typing import Dict, Iterable, List, Optional
 
 from repro.metrics.retrieval import ndcg_at_k, recall_at_k
+from repro.obs.quality import RollingWindows
 from repro.router.tooldb import ConflictError, ToolsDatabase
 
 __all__ = ["GuardConfig", "GuardReport", "TableGuard"]
@@ -64,8 +62,10 @@ class TableGuard:
     ):
         self.db = db
         self.config = config
-        self._ndcg: Dict[int, Deque[float]] = {}
-        self._recall: Dict[int, Deque[float]] = {}
+        # per-version rolling windows (repro.obs.quality's shared machinery,
+        # accessed only under self._lock — RollingWindows is not locked)
+        self._ndcg = RollingWindows(config.window)
+        self._recall = RollingWindows(config.window)
         self._baseline: Dict[int, Optional[float]] = {}  # frozen at swap time
         self._last_version = db.table_version
         self._lock = threading.Lock()
@@ -91,11 +91,8 @@ class TableGuard:
         nd = ndcg_at_k(ranked, rel, self.config.k)
         rc = recall_at_k(ranked, rel, self.config.k)
         with self._lock:
-            if table_version not in self._ndcg:
-                self._ndcg[table_version] = deque(maxlen=self.config.window)
-                self._recall[table_version] = deque(maxlen=self.config.window)
-            self._ndcg[table_version].append(float(nd))
-            self._recall[table_version].append(float(rc))
+            self._ndcg.push(table_version, nd)
+            self._recall.push(table_version, rc)
 
     def note_swap(self, old_version: int, new_version: int) -> None:
         """Freeze the outgoing version's rolling NDCG as the incoming
@@ -103,22 +100,19 @@ class TableGuard:
         An old version without enough samples yields no baseline — the guard
         then has nothing to compare against and will not judge the swap."""
         with self._lock:
-            old = self._ndcg.get(old_version)
             self._baseline[new_version] = (
-                float(np.mean(old))
-                if old is not None and len(old) >= self.config.min_samples
+                self._ndcg.mean(old_version)
+                if self._ndcg.n(old_version) >= self.config.min_samples
                 else None
             )
             self._last_version = new_version
 
     def version_stats(self, table_version: int) -> dict:
         with self._lock:
-            nd = self._ndcg.get(table_version, ())
-            rc = self._recall.get(table_version, ())
             return {
-                "n": len(nd),
-                "ndcg": float(np.mean(nd)) if nd else None,
-                "recall": float(np.mean(rc)) if rc else None,
+                "n": self._ndcg.n(table_version),
+                "ndcg": self._ndcg.mean(table_version),
+                "recall": self._recall.mean(table_version),
                 "baseline": self._baseline.get(table_version),
             }
 
@@ -131,26 +125,25 @@ class TableGuard:
                 # unannounced swap (an out-of-band job that bypassed the
                 # controller — the very case shadow monitoring exists for):
                 # freeze the displaced version's rolling NDCG as baseline
-                old = self._ndcg.get(self._last_version)
                 self._baseline[version] = (
-                    float(np.mean(old))
-                    if old is not None and len(old) >= self.config.min_samples
+                    self._ndcg.mean(self._last_version)
+                    if self._ndcg.n(self._last_version) >= self.config.min_samples
                     else None
                 )
             self._last_version = version
             # prune dead versions: anything no longer live nor retained can
             # never be judged or restored again, and a long-running daemon
-            # under table churn would otherwise grow these dicts forever
+            # under table churn would otherwise grow these windows forever
             alive = set(self.db.retained_versions())
             alive.add(version)
-            for d in (self._ndcg, self._recall, self._baseline):
-                for v in [v for v in d if v not in alive]:
-                    del d[v]
-            window = self._ndcg.get(version)
-            n = len(window) if window is not None else 0
+            self._ndcg.prune(alive)
+            self._recall.prune(alive)
+            for v in [v for v in self._baseline if v not in alive]:
+                del self._baseline[v]
+            n = self._ndcg.n(version)
             if n < self.config.min_samples:
                 return GuardReport("insufficient_data", version, n_samples=n)
-            ndcg = float(np.mean(window))
+            ndcg = self._ndcg.mean(version)
             baseline = self._baseline.get(version)
             if baseline is None:
                 return GuardReport("no_baseline", version, ndcg=ndcg, n_samples=n)

@@ -23,7 +23,16 @@ from repro.data.benchmarks import make_metatool_like, scale_tool_corpus
 from repro.embedding.bag_encoder import BagEncoder
 from repro.models import model as M
 from repro.models.config import reduced
-from repro.obs import EventBus, HealthMonitor, ObsServer, RouteTracer, get_registry
+from repro.obs import (
+    EventBus,
+    HealthMonitor,
+    ObsServer,
+    QualityMonitor,
+    RouteTracer,
+    SLOEngine,
+    TimeSeriesRing,
+    get_registry,
+)
 from repro.router.gateway import SemanticRouter
 from repro.router.latency import measure_latency, percentile_stats
 from repro.router.tooldb import ToolRecord, ToolsDatabase
@@ -38,13 +47,21 @@ def build_router(
     seed: int = 0,
     tracer=None,
     bus=None,
+    quality=None,
+    cleanups=None,
 ):
     """Gateway over the refined table; `backend` picks the index scorer.
 
     `num_tools > bench.n_tools` tiles + perturbs the refined table to that
     size (`scale_tool_corpus`) — the MCP-registry-scale demo. Scaled row i
     is a clone of base tool `i % bench.n_tools` (provenance by modulo).
+
+    `cleanups`, when passed, collects the detach handles of any listeners
+    this builder registers on the database (bus/quality watches) so the
+    caller can unregister them at shutdown instead of leaking them across
+    instances.
     """
+    detach = (cleanups.append if cleanups is not None else lambda fn: None)
     enc = BagEncoder(bench.vocab)
     # offline control plane: fit the requested OATS stage, then deploy it
     pipe = OATSPipeline.fit(bench, PipelineConfig(stages=STAGE_PRESETS[stage], k=k), enc)
@@ -68,7 +85,9 @@ def build_router(
         ]
         db = ToolsDatabase(records, table)  # refined table baked in at scale
         if bus is not None:
-            bus.watch_db(db)
+            detach(bus.watch_db(db))
+        if quality is not None:
+            detach(quality.watch_db(db))
     else:
         records = [
             ToolRecord(i, f"tool_{i}", bench.desc_tokens[i], int(bench.tool_category[i]))
@@ -77,9 +96,11 @@ def build_router(
         db = ToolsDatabase(records, enc.encode(bench.desc_tokens))
         # watch BEFORE the deploy swap: every table move — this one, later
         # controller swaps, guard rollbacks, out-of-band deploys — must land
-        # on the bus
+        # on the bus (and refresh the drift detector's reference stats)
         if bus is not None:
-            bus.watch_db(db)
+            detach(bus.watch_db(db))
+        if quality is not None:
+            detach(quality.watch_db(db))
         # the §7.2 deploy step, exercised; the db was constructed just above
         # so version 0 is the only possible live version — the CAS still
         # guards against this block ever being reordered after serving starts
@@ -92,6 +113,7 @@ def build_router(
         backend=backend,
         tracer=tracer,
         bus=bus,
+        quality=quality,
     )
     # demo timing should reflect the index path, not the mid-build fallback
     if not router.index.wait_ready(timeout_s=300.0):
@@ -138,25 +160,36 @@ def main(argv=None):
 
     # telemetry plane: metrics go to the process registry (the router
     # records into it by default), lifecycle events to one shared bus,
-    # sampled traces to a bounded ring
+    # sampled traces to a bounded ring; the judgement layer (timeseries
+    # ring + SLO engine + quality monitor) watches all three
     bus = EventBus()
     tracer = RouteTracer(sample_every=max(args.trace_every, 1), seed=args.seed)
+    quality = QualityMonitor(registry=get_registry(), bus=bus)
+    cleanups = []
 
     print("== building tool benchmark + OATS control plane ==")
     bench = make_metatool_like(seed=args.seed, n_tools=args.n_tools, n_queries=args.n_queries)
     router, pipe = build_router(
         bench, args.stage, backend=args.backend, num_tools=args.num_tools,
-        seed=args.seed, tracer=tracer, bus=bus,
+        seed=args.seed, tracer=tracer, bus=bus, quality=quality,
+        cleanups=cleanups,
     )
     print(f"== index backend: {args.backend} over {len(router.db)} tools ==")
 
-    monitor = HealthMonitor(routers=[router], indexes=[router.index], bus=bus)
+    ring = TimeSeriesRing(get_registry(), bus=bus)
+    slo_engine = SLOEngine(ring, bus=bus, registry=get_registry())
+    monitor = HealthMonitor(routers=[router], indexes=[router.index], bus=bus,
+                            slo=slo_engine)
     obs_server = None
     if args.metrics_port is not None:
+        # the ring's cadence is also the SLO judgement cadence: one daemon
+        # snapshots the registry and evaluates burn rates on every tick
+        ring.start(interval_s=1.0, on_tick=lambda r: slo_engine.evaluate())
         obs_server = ObsServer(monitor, get_registry(), bus,
-                               port=args.metrics_port).start()
+                               port=args.metrics_port,
+                               slo=slo_engine, tracer=tracer).start()
         print(f"== obs: http://{obs_server.host}:{obs_server.port}"
-              f"{{/metrics,/health,/events}} ==")
+              f"{{/metrics,/health,/events,/slo,/traces}} ==")
 
     print("== loading backend pool ==")
     cfg = get_config(args.arch)
@@ -207,6 +240,11 @@ def main(argv=None):
     print(f"outcome log: {len(router.outcome_log)} events (feeds the next cron refinement)")
     print(f"index stats: {router.index.stats}")
     print(f"health: {monitor.snapshot()['status']} | bus events: {bus.counts()}")
+    q = quality.summary()
+    drift = q["drift_score"]
+    print(f"quality: drift_score={drift:.3f} "
+          f"(drifting={q['drifting']})" if drift is not None
+          else "quality: no drift reference")
     if args.trace_export:
         n = tracer.export_jsonl(args.trace_export)
         print(f"wrote {n} route traces to {args.trace_export} "
@@ -232,8 +270,16 @@ def main(argv=None):
             print(f"  {stage:8s}: {d.action} {d.reason}")
         print(f"live stages: {sorted(report.active) or '(none)'} "
               f"(stage v{report.stage_version})")
+    # orderly shutdown: stop the cadence daemon and the HTTP server, then
+    # unregister every db listener this process attached (bus/quality
+    # watches + the router-owned index manager) so nothing leaks if the
+    # database outlives this serve invocation (tests reuse interpreters)
+    ring.stop()
     if obs_server is not None:
         obs_server.stop()
+    for fn in cleanups:
+        fn()
+    router.close()
     return stats
 
 

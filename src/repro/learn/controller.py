@@ -38,7 +38,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -52,6 +51,7 @@ from repro.learn.trainers import (
     TrainWindow,
     stage_ndcg,
 )
+from repro.obs import clock as obs_clock
 from repro.router.tooldb import ConflictError, ToolsDatabase
 
 __all__ = [
@@ -162,7 +162,7 @@ class LearningController:
         adapter_trainer: Optional[AdapterTrainer] = None,
         reranker_trainer: Optional[RerankerTrainer] = None,
         routers: Sequence = (),  # extra routers to drain into the store
-        clock: Callable[[], float] = time.monotonic,
+        clock: Callable[[], float] = obs_clock.monotonic,
         # injectable for tests; production keeps the §7.3 decision table
         plan_fn: Callable[[int, int], DeploymentPlan] = recommend_stages,
         bus: Optional["EventBus"] = None,  # repro.obs.events lifecycle surface

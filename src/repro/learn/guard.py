@@ -22,12 +22,10 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from collections import deque
-from typing import Deque, Dict, Iterable, List, Optional
-
-import numpy as np
+from typing import Dict, Iterable, List, Optional
 
 from repro.metrics.retrieval import ndcg_at_k
+from repro.obs.quality import RollingWindows
 from repro.router.tooldb import ConflictError
 
 __all__ = ["StageGuardConfig", "StageGuardReport", "StageGuard"]
@@ -64,7 +62,9 @@ class StageGuard:
     ):
         self.router = router
         self.config = config
-        self._ndcg: Dict[int, Deque[float]] = {}
+        # per-version rolling windows (repro.obs.quality's shared machinery,
+        # accessed only under self._lock — RollingWindows is not locked)
+        self._ndcg = RollingWindows(config.window)
         self._baseline: Dict[int, Optional[float]] = {}
         self._last_version = router.stage_version
         self._lock = threading.Lock()
@@ -83,9 +83,7 @@ class StageGuard:
         have moved since the batch was scored)."""
         nd = ndcg_at_k(list(ranked_tools), list(relevant), self.config.k)
         with self._lock:
-            if stage_version not in self._ndcg:
-                self._ndcg[stage_version] = deque(maxlen=self.config.window)
-            self._ndcg[stage_version].append(float(nd))
+            self._ndcg.push(stage_version, nd)
 
     def note_promotion(self, old_version: int, new_version: int) -> None:
         """Freeze the outgoing stage set's rolling NDCG as the promoted
@@ -93,20 +91,18 @@ class StageGuard:
         CAS activation). A predecessor without enough samples yields no
         baseline — the guard then has nothing to judge the promotion by."""
         with self._lock:
-            old = self._ndcg.get(old_version)
             self._baseline[new_version] = (
-                float(np.mean(old))
-                if old is not None and len(old) >= self.config.min_samples
+                self._ndcg.mean(old_version)
+                if self._ndcg.n(old_version) >= self.config.min_samples
                 else None
             )
             self._last_version = new_version
 
     def version_stats(self, stage_version: int) -> dict:
         with self._lock:
-            nd = self._ndcg.get(stage_version, ())
             return {
-                "n": len(nd),
-                "ndcg": float(np.mean(nd)) if nd else None,
+                "n": self._ndcg.n(stage_version),
+                "ndcg": self._ndcg.mean(stage_version),
                 "baseline": self._baseline.get(stage_version),
             }
 
@@ -119,26 +115,24 @@ class StageGuard:
                 # unannounced promotion (out-of-band set_stages that bypassed
                 # the controller): freeze the displaced version's rolling
                 # NDCG as its baseline, like TableGuard does for tables
-                old = self._ndcg.get(self._last_version)
                 self._baseline[version] = (
-                    float(np.mean(old))
-                    if old is not None and len(old) >= self.config.min_samples
+                    self._ndcg.mean(self._last_version)
+                    if self._ndcg.n(self._last_version) >= self.config.min_samples
                     else None
                 )
             self._last_version = version
             # prune dead versions (neither live nor a demotion target):
             # a long-running daemon under promotion churn must not grow
-            # these dicts forever
+            # these windows forever
             alive = set(self.router.retained_stage_versions())
             alive.add(version)
-            for d in (self._ndcg, self._baseline):
-                for v in [v for v in d if v not in alive]:
-                    del d[v]
-            window = self._ndcg.get(version)
-            n = len(window) if window is not None else 0
+            self._ndcg.prune(alive)
+            for v in [v for v in self._baseline if v not in alive]:
+                del self._baseline[v]
+            n = self._ndcg.n(version)
             if n < self.config.min_samples:
                 return StageGuardReport("insufficient_data", version, n_samples=n)
-            ndcg = float(np.mean(window))
+            ndcg = self._ndcg.mean(version)
             baseline = self._baseline.get(version)
             if baseline is None:
                 return StageGuardReport("no_baseline", version, ndcg=ndcg, n_samples=n)

@@ -17,11 +17,11 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from collections import OrderedDict
 from typing import Dict, List, Optional
 
 from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.obs import clock
 
 __all__ = ["StageArtifact", "ArtifactRegistry"]
 
@@ -72,7 +72,7 @@ class ArtifactRegistry:
                 params=params,
                 aux=dict(aux or {}),
                 metrics={k: float(v) for k, v in (metrics or {}).items()},
-                created_at=time.time(),
+                created_at=clock.wall(),
             )
             history = self._artifacts.setdefault(stage, OrderedDict())
             history[version] = artifact

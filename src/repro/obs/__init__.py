@@ -16,11 +16,32 @@ qps). Four surfaces:
   publish lifecycle transitions into (replacing scattered prints and
   write-only attributes).
 * `repro.obs.health` — `HealthMonitor` JSON snapshot (ok/degraded/error)
-  + `ObsServer` HTTP exposition (``/metrics``, ``/health``, ``/events``),
-  wired into `launch/serve.py` behind ``--metrics-port``.
+  + `ObsServer` HTTP exposition (``/metrics``, ``/health``, ``/events``,
+  ``/slo``, ``/traces``), wired into `launch/serve.py` behind
+  ``--metrics-port``.
 
-`repro.obs.clock` is the canonical timing module for `router/` and
-`index/` (the `obs-discipline` lint rule enforces it), and
+On top of those recorders sits the judgement layer (PR 7):
+
+* `repro.obs.timeseries` — `TimeSeriesRing`, a bounded in-process ring of
+  periodic registry snapshots; windowed rates, deltas, and quantiles with
+  no external Prometheus (`window_hist`, `rate`, `delta`).
+* `repro.obs.slo` — declarative `SLO`s (`default_slos()`: route p99 vs the
+  10 ms budget, exact-fallback ratio, guard-rollback rate, drop rate)
+  evaluated by `SLOEngine` with multi-window burn rates; transitions
+  publish ``slo_burn``/``slo_recovered``, `HealthMonitor` degrades while
+  burning, `/slo` serves the snapshot.
+* `repro.obs.quality` — `QualityMonitor`: rolling NDCG@5/Recall@5 on
+  labelled traffic (via `RollingWindows`, the machinery the guards share),
+  top-1/top-2 score-gap confidence, and a label-free query-embedding drift
+  detector that publishes ``quality_drift`` *before* the guards have
+  enough labels to act.
+* exemplars — `LogHistogram.record(value, exemplar=trace_id)` tags the
+  bucket with the most recent sampled trace; `percentile_exemplar(99)`
+  links a p99 reading to a concrete `RouteTrace` (rendered by
+  ``repro-obs watch`` and the `/slo` snapshot).
+
+`repro.obs.clock` is the canonical timing module for `router/`, `index/`,
+`control/`, and `learn/` (the `obs-discipline` lint rule enforces it), and
 `repro.obs.summary` is the one percentile implementation
 (`percentile_stats` re-exported from `repro.router.latency` for compat).
 
@@ -48,6 +69,17 @@ index_rebuilds_total / index_build_failures_total (counter)
     Index lifecycle outcomes, mirroring `ToolIndexManager.stats`.
 index_build_ms (histogram)
     Build durations (k-means rebuilds dominate).
+route_score_gap (histogram)
+    Per-query top-1 minus top-2 score (routing confidence; recorded via
+    `record_many`, one vectorized pass per batch).
+quality_ndcg{k=} / quality_recall{k=} (gauge)
+    `QualityMonitor`'s rolling labelled-traffic means.
+quality_drift_score (gauge)
+    RMS z-score of the query-mean EWMA vs the live table's population
+    stats (the label-free drift signal).
+slo_burning{slo=} / slo_burn_rate{slo=} (gauge)
+    Per-SLO breach state (0/1) and worst long-window burn rate, updated
+    on every `SLOEngine.evaluate`.
 
 Event catalog (kind / plane / required detail stamps)
 =====================================================
@@ -77,6 +109,14 @@ loop_recovered / control|learn — controller
     The next step succeeded (`last_loop_error` cleared).
 outcomes_dropping / serve — dropped
     A router's outcome ring overflowed for the first time.
+slo_burn / serve — slo, sli, burn (+threshold_ms, p99_ms, p99_exemplar)
+    An SLO entered breach: burn > factor over both windows of some pair
+    (``sli`` is the SLI kind — latency|ratio|rate).
+slo_recovered / serve — slo, sli
+    The SLO's next evaluation saw the breach gone.
+quality_drift / serve — score, threshold, table_version
+    The query-population EWMA left the live table's population stats
+    (rising edge only; re-arms when the score falls back under).
 """
 from repro.obs import clock
 from repro.obs.events import Event, EventBus
@@ -89,7 +129,10 @@ from repro.obs.metrics import (
     default_edges,
     get_registry,
 )
+from repro.obs.quality import QualityConfig, QualityMonitor, RollingWindows
+from repro.obs.slo import SLO, BurnWindow, SLOEngine, default_slos
 from repro.obs.summary import LatencyStats, percentile_stats, stats_from_histogram
+from repro.obs.timeseries import HistWindow, TimeSeriesRing
 from repro.obs.trace import RouteTrace, RouteTracer, TraceSampler
 
 __all__ = [
@@ -110,4 +153,13 @@ __all__ = [
     "RouteTrace",
     "RouteTracer",
     "TraceSampler",
+    "HistWindow",
+    "TimeSeriesRing",
+    "SLO",
+    "BurnWindow",
+    "SLOEngine",
+    "default_slos",
+    "QualityConfig",
+    "QualityMonitor",
+    "RollingWindows",
 ]

@@ -88,16 +88,21 @@ class EventBus:
         with self._lock:
             self._subscribers.append(fn)
 
-    def watch_db(self, db) -> None:
+    def watch_db(self, db) -> Callable[[], None]:
         """Publish a "swap" event for every table version change on `db`.
 
         Registered as a `ToolsDatabase` swap listener, so controller swaps,
         guard rollbacks, and out-of-band deploys all surface — the listener
         fires after the database lock is released, like index rebuilds.
+
+        Returns a zero-arg detach handle that unregisters the listener, so
+        long-lived tests and `launch/serve.py` shutdown don't leak
+        listeners across database instances. Idempotent.
         """
-        db.add_swap_listener(
-            lambda version: self.publish("swap", plane="control", version=version)
-        )
+        listener = lambda version: self.publish("swap", plane="control",
+                                                version=version)
+        db.add_swap_listener(listener)
+        return lambda: db.remove_swap_listener(listener)
 
     # --------------------------------------------------------------- reading
     def __len__(self) -> int:

@@ -15,15 +15,20 @@ but that were previously write-only attributes someone had to know to poll:
 `status` folds those into one tri-state: ``"error"`` when any daemon loop
 is failing (`last_loop_error` set), ``"degraded"`` when serving is correct
 but not nominal (stale index serving the exact fallback, outcome events
-dropped), ``"ok"`` otherwise. Clear-on-recovery is inherited from the
-controllers: the next successful step clears `last_loop_error` and the
-snapshot goes back to "ok" with no monitor-side state.
+dropped, an SLO currently burning — see `repro.obs.slo`), ``"ok"``
+otherwise. Clear-on-recovery is inherited from the controllers: the next
+successful step clears `last_loop_error` and the snapshot goes back to
+"ok" with no monitor-side state (SLO state clears when the engine's next
+evaluation sees the burn gone).
 
 `ObsServer` exposes the snapshot over HTTP for scrapers and humans:
 ``/metrics`` (Prometheus text exposition from the registry), ``/health``
 (this snapshot as JSON; 503 on "error" so load-balancer checks fail over),
-``/events?since=N`` (bus tail). It is a daemon-threaded stdlib server —
-zero deps, good for one scraper and a curl, not a public ingress.
+``/events?since=N`` (bus tail), ``/slo`` (the SLO engine's burn-rate
+snapshot), and ``/traces?since=N`` / ``/traces?id=N`` (the tracer ring —
+how `repro-obs watch` resolves a p99 exemplar id into its RouteTrace). It
+is a daemon-threaded stdlib server — zero deps, good for one scraper and
+a curl, not a public ingress.
 """
 from __future__ import annotations
 
@@ -47,12 +52,14 @@ class HealthMonitor:
         indexes: Sequence = (),  # ToolIndexManagers
         stores: Sequence = (),  # OutcomeStores
         bus: Optional[EventBus] = None,
+        slo: Optional["SLOEngine"] = None,  # repro.obs.slo
     ):
         self.routers = list(routers)
         self.controllers = list(controllers)
         self.indexes = list(indexes)
         self.stores = list(stores)
         self.bus = bus
+        self.slo = slo
 
     def snapshot(self) -> dict:
         serving = []
@@ -83,10 +90,14 @@ class HealthMonitor:
             for s in self.stores
         ]
         loop_errors = [c for c in control if c["last_loop_error"] is not None]
+        # a burning SLO is "degraded", not "error": serving is still correct,
+        # it is just out of objective — same class as fallback-serving
+        burning = self.slo.burning() if self.slo is not None else []
         degraded = (
             any(not m["fresh"] for m in index)
             or any(r["outcomes_dropped"] for r in serving)
             or any(s["dropped"] for s in stores)
+            or bool(burning)
         )
         status = "error" if loop_errors else ("degraded" if degraded else "ok")
         snap = {
@@ -97,6 +108,8 @@ class HealthMonitor:
             "index": index,
             "stores": stores,
         }
+        if self.slo is not None:
+            snap["slo"] = {"burning": burning}
         if self.bus is not None:
             snap["events"] = {
                 "counts": self.bus.counts(),
@@ -116,10 +129,14 @@ class ObsServer:
         bus: Optional[EventBus] = None,
         host: str = "127.0.0.1",
         port: int = 0,  # 0 = ephemeral; read `.port` after construction
+        slo: Optional["SLOEngine"] = None,  # repro.obs.slo
+        tracer: Optional["RouteTracer"] = None,  # repro.obs.trace
     ):
         self.monitor = monitor or HealthMonitor()
         self.registry = registry or get_registry()
         self.bus = bus
+        self.slo = slo
+        self.tracer = tracer
         server = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -149,6 +166,28 @@ class ObsServer:
                     )
                     evs = [e.as_dict() for e in server.bus.events(since)]
                     self._send(200, json.dumps(evs, indent=2),
+                               "application/json")
+                elif url.path == "/slo" and server.slo is not None:
+                    # snapshot() evaluates — a scrape is also a judgement,
+                    # and the engine's transition latch keeps events single
+                    snap = server.slo.snapshot()
+                    self._send(200, json.dumps(snap, indent=2),
+                               "application/json")
+                elif url.path == "/traces" and server.tracer is not None:
+                    qs = parse_qs(url.query)
+                    if "id" in qs:
+                        t = server.tracer.get(int(qs["id"][0]))
+                        if t is None:
+                            self._send(404, "trace not retained\n",
+                                       "text/plain")
+                            return
+                        self._send(200, json.dumps(t.as_dict(), indent=2),
+                                   "application/json")
+                        return
+                    since = int(qs.get("since", ["-1"])[0])
+                    recs = [t.as_dict() for t in server.tracer.traces()
+                            if t.trace_id > since]
+                    self._send(200, json.dumps(recs, indent=2),
                                "application/json")
                 else:
                     self._send(404, "not found\n", "text/plain")

@@ -30,6 +30,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import clock
+
 __all__ = [
     "Counter",
     "Gauge",
@@ -120,9 +122,15 @@ class LogHistogram:
         self._sum = 0.0
         self._min = math.inf
         self._max = -math.inf
+        # per-bucket most-recent exemplar slots, allocated lazily on the
+        # first record(..., exemplar=) so histograms that never attach
+        # exemplars pay nothing (no flag needed at get-or-create time)
+        self._exemplars: Optional[List[Optional[Tuple[object, float, float]]]] = None
         self._lock = threading.Lock()
 
-    def record(self, value: float) -> None:
+    def record(self, value: float, exemplar: Optional[object] = None) -> None:
+        """Record one value; `exemplar` optionally tags its bucket with an
+        opaque id (a sampled trace id) — most-recent-wins per bucket."""
         v = float(value)
         # bucket index outside the lock: searchsorted is pure computation
         i = int(np.searchsorted(self.edges, v, side="left"))
@@ -134,6 +142,37 @@ class LogHistogram:
                 self._min = v
             if v > self._max:
                 self._max = v
+            if exemplar is not None:
+                if self._exemplars is None:
+                    self._exemplars = [None] * len(self._counts)
+                self._exemplars[i] = (exemplar, v, clock.wall())
+
+    def record_many(self, values) -> None:
+        """Bulk record: one vectorized bucket pass + one lock acquisition.
+
+        The per-batch cost is one `searchsorted` + `bincount` over the whole
+        array, so per-query instruments (score gaps: batch-size values per
+        route_batch) stay inside the telemetry overhead budget.
+        """
+        v = np.asarray(values)
+        if v.ndim != 1:
+            v = v.ravel()
+        if v.size == 0:
+            return
+        idx = np.searchsorted(self.edges, v, side="left")
+        binned = np.bincount(idx, minlength=len(self._counts)).astype(
+            np.int64, copy=False
+        )
+        total, s = int(v.size), float(v.sum())
+        lo, hi = float(v.min()), float(v.max())
+        with self._lock:
+            self._counts += binned
+            self._count += total
+            self._sum += s
+            if lo < self._min:
+                self._min = lo
+            if hi > self._max:
+                self._max = hi
 
     # ---------------------------------------------------------------- reading
     def count(self) -> int:
@@ -172,10 +211,39 @@ class LogHistogram:
         est = left + (right - left) * min(max(frac, 0.0), 1.0)
         return float(min(max(est, lo), hi))
 
+    def exemplars(self) -> Dict[int, Tuple[object, float, float]]:
+        """{bucket_index: (exemplar_id, value, wall_ts)} for tagged buckets."""
+        with self._lock:
+            if self._exemplars is None:
+                return {}
+            return {i: e for i, e in enumerate(self._exemplars) if e is not None}
+
+    def percentile_exemplar(self, q: float) -> Optional[Tuple[object, float, float]]:
+        """The exemplar nearest the q-th percentile's bucket, or None.
+
+        Prefers the percentile bucket itself, then higher buckets (the tail
+        the percentile summarizes), then lower ones — so "your p99 bucket →
+        this trace" degrades gracefully when sampling missed that bucket.
+        """
+        with self._lock:
+            if self._exemplars is None or self._count == 0:
+                return None
+            counts = self._counts.copy()
+            total = self._count
+            slots = list(self._exemplars)
+        rank = q / 100.0 * total
+        cum = np.cumsum(counts)
+        i = min(int(np.searchsorted(cum, rank, side="left")), len(counts) - 1)
+        for j in list(range(i, len(slots))) + list(range(i - 1, -1, -1)):
+            if slots[j] is not None:
+                return slots[j]
+        return None
+
     def summary(self) -> Dict[str, float]:
         with self._lock:
             total, lo, hi = self._count, self._min, self._max
-        return {
+            has_exemplars = self._exemplars is not None
+        out = {
             "count": total,
             "mean": self.mean(),
             "p50": self.percentile(50.0),
@@ -184,6 +252,11 @@ class LogHistogram:
             "min": lo if total else 0.0,
             "max": hi if total else 0.0,
         }
+        if has_exemplars:
+            ex = self.percentile_exemplar(99.0)
+            if ex is not None:
+                out["p99_exemplar"] = ex[0]
+        return out
 
 
 def _label_key(labels: Dict[str, str]) -> Tuple[Tuple[str, str], ...]:

@@ -2,24 +2,38 @@
 
   PYTHONPATH=src python -m repro.obs.report trace.jsonl
   repro-obs trace.jsonl                    # installed entry point
+  repro-obs trace.jsonl --since 1754600000 # only records at/after that ts
   repro-obs --health http://127.0.0.1:9100 # pretty-print a live /health
+  repro-obs --follow http://127.0.0.1:9100 # tail the live event bus
+  repro-obs --watch  http://127.0.0.1:9100 # live health+SLO+exemplar panel
 
 Reads the JSONL a `RouteTracer.export_jsonl` wrote (one RouteTrace per
 line) and prints per-phase latency percentiles, the path/bucket mix, and
 the version span of the traced traffic — the offline twin of the
 `/metrics` histograms, with exact per-batch samples instead of bucket
-estimates.
+estimates. Against a live `ObsServer`, ``--follow`` tails ``/events``
+using the bus's monotone ``since=`` cursor (every retained event exactly
+once), and ``--watch`` renders a periodic panel of ``/health`` + ``/slo``,
+resolving any burning latency SLO's p99 exemplar through ``/traces?id=``
+into the actual RouteTrace spans.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
-from typing import Dict, List
+import time
+from typing import Callable, Dict, List, Optional
 
 from repro.obs.summary import percentile_stats
 
-__all__ = ["render_trace_report", "main"]
+__all__ = [
+    "follow_events",
+    "main",
+    "render_trace_report",
+    "render_watch_panel",
+    "watch",
+]
 
 
 def _load_jsonl(path: str) -> List[dict]:
@@ -69,6 +83,139 @@ def render_trace_report(records: List[dict]) -> str:
     return "\n".join(lines) + "\n"
 
 
+def _fetch_json(url: str, timeout: float = 5.0):
+    from urllib.request import urlopen
+
+    with urlopen(url, timeout=timeout) as resp:
+        return json.loads(resp.read())
+
+
+def _format_event(e: dict) -> str:
+    extra = {k: v for k, v in e.items() if k not in ("seq", "ts", "kind", "plane")}
+    detail = " ".join(f"{k}={v}" for k, v in sorted(extra.items()))
+    return f"[{e['seq']:5d}] {e['plane']:8s} {e['kind']:18s} {detail}".rstrip()
+
+
+def follow_events(
+    url: str,
+    interval: float = 1.0,
+    max_polls: int = 0,
+    out=None,
+) -> int:
+    """Tail a live ObsServer's event bus (``/events?since=``).
+
+    The bus's monotone seq is the cursor: each poll asks only for events
+    past the last seen seq, so every retained event prints exactly once.
+    ``max_polls=0`` follows until interrupted (the CLI default); tests pass
+    a bound. Returns the number of events printed.
+    """
+    out = out or sys.stdout
+    base = url.rstrip("/")
+    since, polls, printed = -1, 0, 0
+    while True:
+        try:
+            evs = _fetch_json(f"{base}/events?since={since}")
+        except Exception as exc:
+            out.write(f"unreachable: {exc}\n")
+            evs = []
+        for e in evs:
+            out.write(_format_event(e) + "\n")
+            printed += 1
+            since = max(since, int(e["seq"]))
+        out.flush()
+        polls += 1
+        if max_polls and polls >= max_polls:
+            return printed
+        time.sleep(interval)
+
+
+def render_watch_panel(
+    health: dict,
+    slo: Optional[dict],
+    trace_lookup: Optional[Callable[[int], Optional[dict]]] = None,
+) -> str:
+    """One frame of the live panel: status line, per-SLO burn table, and
+    the p99 exemplar link for latency SLOs ("your p99 bucket → this
+    RouteTrace") when the tracer sampled one."""
+    lines = [f"health: {health.get('status', '?')}"]
+    if slo is None:
+        lines.append("slo: (engine not wired)")
+        return "\n".join(lines) + "\n"
+    burning = slo.get("burning", [])
+    lines.append(
+        f"slo: {slo.get('status', '?')}"
+        + (f" — burning: {', '.join(burning)}" if burning else "")
+    )
+    lines.append(f"{'slo':24s} {'state':8s} {'burn':>8s}  detail")
+    for name, s in sorted(slo.get("slos", {}).items()):
+        burn = s.get("burn")
+        burn_s = f"{burn:8.2f}" if burn is not None else f"{'—':>8s}"
+        if s["kind"] == "latency" and s.get("p99_ms") is not None:
+            detail = f"p99={s['p99_ms']:.2f}ms vs {s['threshold_ms']:g}ms"
+        else:
+            detail = s.get("description", "")
+        state = "BURNING" if s.get("burning") else "ok"
+        lines.append(f"{name:24s} {state:8s} {burn_s}  {detail}")
+        ex = s.get("p99_exemplar")
+        if ex is not None:
+            trace = trace_lookup(int(ex)) if trace_lookup is not None else None
+            if trace is not None:
+                spans = ", ".join(
+                    f"{n} {ms:.2f}ms" for n, ms in trace["spans"].items()
+                )
+                lines.append(
+                    f"{'':24s} p99 exemplar → trace #{ex} "
+                    f"[{spans}] (batch={trace['batch_size']}, "
+                    f"path={trace['path']}, table=v{trace['table_version']})"
+                )
+            else:
+                lines.append(f"{'':24s} p99 exemplar → trace #{ex} "
+                             f"(not retained)")
+    return "\n".join(lines) + "\n"
+
+
+def watch(
+    url: str,
+    interval: float = 2.0,
+    iterations: int = 0,
+    out=None,
+) -> int:
+    """Periodic ``/health`` + ``/slo`` panel against a live ObsServer.
+
+    ``iterations=0`` runs until interrupted; tests pass a bound. Returns
+    the number of frames rendered.
+    """
+    out = out or sys.stdout
+    base = url.rstrip("/")
+    frames = 0
+    while True:
+        try:
+            health = _fetch_json(f"{base}/health")
+        except Exception as exc:
+            fp = getattr(exc, "fp", None)  # 503 still carries the snapshot
+            health = json.loads(fp.read()) if fp is not None else {
+                "status": f"unreachable: {exc}"
+            }
+        try:
+            slo = _fetch_json(f"{base}/slo")
+        except Exception:
+            slo = None
+
+        def _lookup(trace_id: int) -> Optional[dict]:
+            try:
+                return _fetch_json(f"{base}/traces?id={trace_id}")
+            except Exception:
+                return None
+
+        out.write(f"== repro-obs watch @ {time.strftime('%H:%M:%S')} ==\n")
+        out.write(render_watch_panel(health, slo, _lookup))
+        out.flush()
+        frames += 1
+        if iterations and frames >= iterations:
+            return frames
+        time.sleep(interval)
+
+
 def _render_health(url: str) -> str:
     from urllib.request import urlopen
 
@@ -86,15 +233,46 @@ def _render_health(url: str) -> str:
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("trace", nargs="?", help="JSONL file from RouteTracer.export_jsonl")
+    ap.add_argument("--since", type=float, metavar="TS", default=None,
+                    help="only report JSONL traces with ts >= TS "
+                         "(wall-clock epoch seconds)")
     ap.add_argument("--health", metavar="URL",
                     help="pretty-print a live ObsServer /health instead")
+    ap.add_argument("--follow", metavar="URL",
+                    help="tail a live ObsServer's /events (ctrl-C to stop)")
+    ap.add_argument("--watch", metavar="URL",
+                    help="periodic /health + /slo panel with p99 exemplar "
+                         "links (ctrl-C to stop)")
+    ap.add_argument("--interval", type=float, default=1.0,
+                    help="poll interval for --follow/--watch (seconds)")
+    ap.add_argument("--max-polls", type=int, default=0,
+                    help="stop --follow after N polls (0 = forever)")
+    ap.add_argument("--iterations", type=int, default=0,
+                    help="stop --watch after N frames (0 = forever)")
     args = ap.parse_args(argv)
     if args.health:
         sys.stdout.write(_render_health(args.health))
         return 0
+    if args.follow:
+        try:
+            follow_events(args.follow, interval=args.interval,
+                          max_polls=args.max_polls)
+        except KeyboardInterrupt:
+            pass
+        return 0
+    if args.watch:
+        try:
+            watch(args.watch, interval=args.interval,
+                  iterations=args.iterations)
+        except KeyboardInterrupt:
+            pass
+        return 0
     if not args.trace:
-        ap.error("pass a trace JSONL file or --health URL")
-    sys.stdout.write(render_trace_report(_load_jsonl(args.trace)))
+        ap.error("pass a trace JSONL file, or --health/--follow/--watch URL")
+    records = _load_jsonl(args.trace)
+    if args.since is not None:
+        records = [r for r in records if float(r.get("ts", 0.0)) >= args.since]
+    sys.stdout.write(render_trace_report(records))
     return 0
 
 

@@ -125,6 +125,15 @@ class RouteTracer:
         with self._lock:
             return list(self._ring)
 
+    def get(self, trace_id: int) -> Optional[RouteTrace]:
+        """Retained trace by id, or None (evicted / never sampled) — the
+        lookup behind exemplar links ("your p99 bucket → this trace")."""
+        with self._lock:
+            for t in reversed(self._ring):
+                if t.trace_id == trace_id:
+                    return t
+        return None
+
     def export_jsonl(self, path: str) -> int:
         """Write retained traces as JSONL; returns the number written."""
         traces = self.traces()

@@ -100,6 +100,10 @@ class _GatewayInstruments:
         self.table_version = registry.gauge("route_table_version")
         self.stage_version = registry.gauge("route_stage_version")
         self.outcomes_dropped = registry.counter("route_outcomes_dropped_total")
+        # top-1/top-2 score gap per query (routing confidence; a collapsing
+        # gap means the router is guessing) — recorded via record_many, one
+        # vectorized pass per batch, so per-query cost stays O(1/batch)
+        self.score_gap = registry.histogram("route_score_gap")
 
 
 @dataclasses.dataclass
@@ -146,6 +150,7 @@ class SemanticRouter:
         metrics: Union[MetricsRegistry, bool, None] = None,
         tracer: Optional["RouteTracer"] = None,  # repro.obs.trace
         bus: Optional["EventBus"] = None,  # repro.obs.events
+        quality: Optional["QualityMonitor"] = None,  # repro.obs.quality
     ):
         self.db = db
         self.embed_fn = embed_fn
@@ -205,6 +210,9 @@ class SemanticRouter:
             self._obs = _GatewayInstruments(registry)
         self._tracer = tracer
         self._bus = bus
+        # streaming quality observability (repro.obs.quality): route_batch
+        # feeds it raw query embeddings for label-free drift detection
+        self._quality = quality
 
     def close(self) -> None:
         """Tear down a retiring router (idempotent).
@@ -429,18 +437,13 @@ class SemanticRouter:
                 spans.append(("rerank", (t_rank - t_score) * 1e3))
             spans.append(("assemble", (t_done - t_rank) * 1e3))
             total_ms = (t_done - t0) * 1e3
-            if obs is not None:
-                obs.requests.inc(n_q)
-                obs.batches.inc()
-                obs.batch_size.record(float(n_q))
-                obs.batch_ms.record(total_ms)
-                phase = obs.phase
-                for name, ms in spans:
-                    phase[name].record(ms)
-                obs.table_version.set(table_version)
-                obs.stage_version.set(stage_version)
+            # trace BEFORE metrics: a sampled batch's trace id becomes the
+            # exemplar on the duration buckets it lands in, so a p99 reading
+            # links straight to a concrete RouteTrace ("/slo" and
+            # `repro-obs watch` render that link)
+            trace = None
             if tracing:
-                self._tracer.record(
+                trace = self._tracer.record(
                     batch_size=n_q,
                     bucket=n_q + n_pad,
                     path=self.index.last_path(),
@@ -449,6 +452,29 @@ class SemanticRouter:
                     spans=spans,
                     total_ms=total_ms,
                 )
+            if obs is not None:
+                exemplar = trace.trace_id if trace is not None else None
+                obs.requests.inc(n_q)
+                obs.batches.inc()
+                obs.batch_size.record(float(n_q))
+                obs.batch_ms.record(total_ms, exemplar=exemplar)
+                phase = obs.phase
+                for name, ms in spans:
+                    phase[name].record(ms, exemplar=exemplar)
+                obs.table_version.set(table_version)
+                obs.stage_version.set(stage_version)
+                if top_scores.shape[1] >= 2:
+                    # one vectorized pass over the batch (see score_gap note
+                    # in _GatewayInstruments); rows with < 2 valid candidates
+                    # carry the NEG_INF sentinel in slot 1 and are skipped
+                    valid2 = top_scores[:, 1] > NEG_INF / 2
+                    if np.any(valid2):
+                        gaps = top_scores[:, 0] - top_scores[:, 1]
+                        obs.score_gap.record_many(gaps[valid2])
+        if self._quality is not None:
+            # raw pre-adapter embeddings, unpadded rows: drift is about the
+            # query population vs the live table, not about learned stages
+            self._quality.observe_queries(q)
         return out
 
     def route(
