@@ -1,0 +1,398 @@
+"""Flight-recorder smoke: an incident produces exactly one usable dump.
+
+  PYTHONPATH=src python -m benchmarks.flightrec_bench [--smoke] [--out BENCH_flightrec.json]
+
+Three acceptance gates, all enforced with SystemExit (CI smoke-runs this
+via scripts/ci_check.sh):
+
+1. **Breach dump**: the full telemetry plane serves live traffic while an
+   injected embed latency burns the second-scale latency SLO. The armed
+   `FlightRecorder` must write exactly ONE dump for the whole incident
+   storm — the ``slo_burn`` trigger dumps, a follow-on ``rollback``
+   published inside the debounce window is suppressed — with version
+   stamps matching the live (table_version, stage_version) composition,
+   >=1 dumped trace carrying the same stamps (including the burn event's
+   p99 exemplar), and a ``repro-obs replay`` rendering that names the
+   trigger. Nothing may dump during the healthy window.
+
+2. **Crash dump**: a `RefinementController` daemon whose step raises on
+   every iteration must produce exactly one crash dump (debounce absorbs
+   the crash loop AND the bus-side ``loop_error``), naming the source.
+
+3. **Recorder overhead**: arming a recorder adds a bus subscription and
+   zero per-batch work — serving qps with an armed recorder must stay
+   within the 5 % obs budget of the identical un-armed stack, measured
+   with the same slice-interleaved paired rounds as obs_bench.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.obs_bench import OVERHEAD_BUDGET, _timed_pair
+from benchmarks.slo_bench import _build_router, _fetch, _serve_thread, _wait_for
+
+BATCH = 16
+TICK_S = 0.25  # ring cadence: every tick also evaluates the SLO engine
+SLOW_EMBED_S = 0.015  # injected per-batch embed latency (> the 10 ms budget)
+DEBOUNCE_S = 60.0  # one incident window: the whole scenario fits inside
+
+
+def _blocks(bench, batch=BATCH, n=4):
+    return [
+        [bench.query_tokens[qi] for qi in bench.train_idx[lo : lo + batch]]
+        for lo in range(0, batch * n, batch)
+    ]
+
+
+def run_breach(bench, enc, smoke: bool, seed: int) -> dict:
+    """Gate 1: latency injection -> slo_burn -> exactly one debounced dump."""
+    from repro.obs import (
+        SLO,
+        BurnWindow,
+        EventBus,
+        FlightRecorder,
+        JitProfiler,
+        MetricsRegistry,
+        QualityMonitor,
+        RouteTracer,
+        SLOEngine,
+        TimeSeriesRing,
+        list_dumps,
+        load_dump,
+        render_replay,
+    )
+    from repro.obs.report import main as report_main
+
+    registry = MetricsRegistry()
+    bus = EventBus()
+    tracer = RouteTracer(sample_every=1, seed=seed)
+    quality = QualityMonitor(registry=registry, bus=bus)
+
+    delay = {"s": 0.0}  # mutable latency injection knob, read per batch
+
+    def slow_embed(tokens):
+        if delay["s"]:
+            time.sleep(delay["s"])
+        return enc.encode(tokens)
+
+    db, router = _build_router(
+        bench, enc, registry, tracer=tracer, bus=bus, quality=quality,
+        embed_batch_fn=slow_embed,
+    )
+    # second-scale SLO, objective 0.90 — same shape as slo_bench's burn
+    slo = SLO(
+        name="route_latency_budget",
+        kind="latency",
+        hist_key="route_batch_ms",
+        threshold_ms=10.0,
+        objective=0.90,
+        windows=(BurnWindow(long_s=2.0, short_s=0.6, factor=1.0),),
+    )
+    ring = TimeSeriesRing(registry, bus=bus)
+    engine = SLOEngine(ring, slos=(slo,), bus=bus, registry=registry)
+    profiler = JitProfiler(registry=registry)
+    dump_dir = tempfile.mkdtemp(prefix="flightrec-bench-")
+    recorder = FlightRecorder(
+        dump_dir, bus=bus, registry=registry, tracer=tracer, ring=ring,
+        slo=engine, profiler=profiler, routers=[router],
+        debounce_s=DEBOUNCE_S,
+    )
+
+    blocks = _blocks(bench)
+    for b in blocks:  # jit warmup off the ring, so the first window is clean
+        router.route_batch(b)
+    profiler.collect()  # baseline the warmup compiles
+
+    ring.start(interval_s=TICK_S,
+               on_tick=lambda _r: (profiler.collect(), engine.evaluate()))
+    stop, t, serve_errors = _serve_thread(router, blocks)
+    try:
+        # healthy window: the armed recorder must stay silent
+        time.sleep(1.2)
+        if recorder.dumps_written != 0:
+            raise SystemExit(
+                f"recorder dumped on healthy traffic: "
+                f"{[d.manifest['reason'] for d in recorder.list()]}"
+            )
+
+        # breach: every batch now pays >10 ms in embed
+        delay["s"] = SLOW_EMBED_S
+        burn_ev = _wait_for(lambda: bus.last("slo_burn"), 20.0,
+                            "slo_burn after latency injection")
+        _wait_for(lambda: recorder.dumps_written >= 1, 10.0,
+                  "the slo_burn dump")
+        # the rest of the incident storm lands inside the debounce window:
+        # suppressed, not double-dumped
+        bus.publish("rollback", plane="control",
+                    condemned_version=db.table_version)
+        if recorder.dumps_written != 1 or recorder.dumps_suppressed < 1:
+            raise SystemExit(
+                f"debounce failed: written={recorder.dumps_written} "
+                f"suppressed={recorder.dumps_suppressed} (want exactly 1 "
+                f"dump, >=1 suppressed)"
+            )
+        delay["s"] = 0.0
+    finally:
+        # the serve.py signal order: recorder first, then the daemons —
+        # teardown publishes must not masquerade as incidents
+        recorder.stop()
+        stop.set()
+        t.join(timeout=30)
+        ring.stop()
+
+    if serve_errors:
+        raise SystemExit(f"serving thread failed during the breach smoke: "
+                         f"{serve_errors[0]!r}")
+    if ring.last_loop_error is not None:
+        raise SystemExit(f"ring daemon flapped: {ring.last_loop_error}")
+
+    dumps = list_dumps(dump_dir)
+    if len(dumps) != 1:
+        raise SystemExit(f"expected exactly one dump, found "
+                         f"{[d.name for d in dumps]}")
+    [dump] = dumps
+    m = dump.manifest
+    if m["reason"] != "slo_burn" or m["trigger"]["kind"] != "slo_burn":
+        raise SystemExit(f"dump not attributed to the burn: reason="
+                         f"{m['reason']} trigger={m['trigger']}")
+    # version stamps must match the live serving composition
+    stage_version, _stages = router.stage_set()
+    [serving] = m["serving"]
+    if (serving["table_version"] != db.table_version
+            or serving["stage_version"] != stage_version):
+        raise SystemExit(
+            f"dump mis-stamped: {serving} (live table v{db.table_version}, "
+            f"stage v{stage_version})"
+        )
+    if m["n_traces"] < 1:
+        raise SystemExit("dump carries no traces (tracer samples every batch)")
+    d = load_dump(dump.path)
+    for tr in d["traces"]:
+        if tr["table_version"] != db.table_version:
+            raise SystemExit(f"dumped trace #{tr['trace_id']} stamped "
+                             f"v{tr['table_version']} != live "
+                             f"v{db.table_version}")
+    # the burn's p99 exemplar resolves INSIDE the dump — the postmortem
+    # never needs the (dead) process that produced it
+    exemplar = burn_ev.details.get("p99_exemplar")
+    if exemplar is None:
+        raise SystemExit(f"slo_burn carries no p99 exemplar: {burn_ev.details}")
+    if not any(tr["trace_id"] == exemplar for tr in d["traces"]):
+        raise SystemExit(f"p99 exemplar trace #{exemplar} not in the dump's "
+                         f"{len(d['traces'])} traces")
+    text = render_replay(dump.path)
+    if "reason: slo_burn" not in text or "trace #" not in text:
+        raise SystemExit(f"replay rendering incomplete:\n{text[:400]}")
+    rc = report_main(["replay", dump_dir])
+    if rc != 0:
+        raise SystemExit(f"repro-obs replay exited {rc} on {dump_dir}")
+
+    row = {
+        "dumps_written": recorder.dumps_written,
+        "dumps_suppressed": recorder.dumps_suppressed,
+        "reason": m["reason"],
+        "serving": serving,
+        "n_traces": m["n_traces"],
+        "artifacts": m["artifacts"],
+        "p99_exemplar": int(exemplar),
+        "burn_details": dict(burn_ev.details),
+        "replay_lines": text.count("\n"),
+    }
+    print(f"breach: 1 dump ({m['name']}), {recorder.dumps_suppressed} "
+          f"suppressed | {m['n_traces']} traces incl. exemplar "
+          f"#{exemplar} | replay {row['replay_lines']} lines", flush=True)
+    router.close()
+    shutil.rmtree(dump_dir, ignore_errors=True)
+    return row
+
+
+def run_crash(bench, enc, smoke: bool, seed: int) -> dict:
+    """Gate 2: a crashing controller daemon -> exactly one crash dump."""
+    from repro.control import ControllerConfig, OutcomeStore, RefinementController
+    from repro.obs import EventBus, FlightRecorder, MetricsRegistry
+
+    registry = MetricsRegistry()
+    bus = EventBus()
+    db, router = _build_router(bench, enc, registry, bus=bus)
+    store = OutcomeStore(n_tools=len(db), capacity=64)
+    dump_dir = tempfile.mkdtemp(prefix="flightrec-bench-crash-")
+    recorder = FlightRecorder(dump_dir, bus=bus, registry=registry,
+                              routers=[router], debounce_s=DEBOUNCE_S)
+    controller = RefinementController(
+        db, store, enc.encode, routers=[router],
+        config=ControllerConfig(min_events=10**9, max_interval_s=10**9),
+        bus=bus, flight_recorder=recorder,
+    )
+
+    def boom():
+        raise RuntimeError("flightrec-bench injected daemon crash")
+
+    controller.step = boom
+    controller.start(interval_s=0.01)
+    try:
+        _wait_for(lambda: recorder.dumps_written >= 1, 10.0,
+                  "the crash dump")
+        time.sleep(0.1)  # the loop keeps crashing; debounce must absorb it
+    finally:
+        controller.stop()
+        recorder.stop()
+
+    dumps = recorder.list()
+    if len(dumps) != 1:
+        raise SystemExit(f"crash loop produced {len(dumps)} dumps "
+                         f"(debounce must collapse it to one)")
+    m = dumps[0].manifest
+    if (m["reason"] != "crash"
+            or m["trigger"]["source"] != "RefinementController"
+            or "injected daemon crash" not in m["trigger"]["error"]):
+        raise SystemExit(f"crash dump mis-attributed: {m['trigger']}")
+    if bus.last("loop_error") is None:
+        raise SystemExit("controller crash never reached the bus")
+
+    row = {
+        "dumps_written": recorder.dumps_written,
+        "dumps_suppressed": recorder.dumps_suppressed,
+        "trigger": dict(m["trigger"]),
+    }
+    print(f"crash: 1 dump from {m['trigger']['source']} "
+          f"({m['trigger']['error_type']}), "
+          f"{recorder.dumps_suppressed} suppressed", flush=True)
+    router.close()
+    shutil.rmtree(dump_dir, ignore_errors=True)
+    return row
+
+
+def run_recorder_overhead(bench, enc, smoke: bool, seed: int) -> dict:
+    """Gate 3: armed vs un-armed recorder on otherwise identical stacks."""
+    from repro.obs import (
+        EventBus,
+        FlightRecorder,
+        MetricsRegistry,
+        QualityMonitor,
+        RouteTracer,
+    )
+
+    def build(armed: bool):
+        registry = MetricsRegistry()
+        bus = EventBus()
+        tracer = RouteTracer(sample_every=64, seed=seed)
+        quality = QualityMonitor(registry=registry, bus=bus)
+        db, router = _build_router(bench, enc, registry, tracer=tracer,
+                                   bus=bus, quality=quality)
+        recorder = None
+        if armed:
+            recorder = FlightRecorder(
+                tempfile.mkdtemp(prefix="flightrec-bench-ovh-"), bus=bus,
+                registry=registry, tracer=tracer, routers=[router],
+                debounce_s=DEBOUNCE_S,
+            )
+        return router, recorder
+
+    unarmed, _ = build(armed=False)
+    armed, recorder = build(armed=True)
+    blocks = _blocks(bench, batch=64)
+    for b in blocks:  # jit warmup
+        unarmed.route_batch(b)
+        armed.route_batch(b)
+
+    n_calls = 32 if smoke else 48
+    rounds = 7
+    ratios, qps_un_all, qps_arm_all = [], [], []
+    for _ in range(rounds):
+        qps_un, qps_arm = _timed_pair(unarmed, armed, blocks, n_calls)
+        qps_un_all.append(qps_un)
+        qps_arm_all.append(qps_arm)
+        ratios.append(qps_arm / qps_un)
+    # same dual-estimator gate as obs_bench: a real cost breaches both the
+    # peak-vs-peak and the paired-median statistics
+    ratio_peak = float(max(qps_arm_all) / max(qps_un_all))
+    ratio_median = float(np.median(ratios))
+    overhead = 1.0 - max(ratio_peak, ratio_median)
+
+    if recorder.dumps_written != 0:
+        raise SystemExit(f"recorder dumped during the overhead measurement "
+                         f"({recorder.dumps_written}) — the gate is void")
+    row = {
+        "n_calls_per_round": n_calls,
+        "rounds": rounds,
+        "qps_unarmed_peak": float(max(qps_un_all)),
+        "qps_armed_peak": float(max(qps_arm_all)),
+        "qps_ratio_peak": ratio_peak,
+        "qps_ratio_median": ratio_median,
+        "overhead_frac": overhead,
+        "overhead_budget": OVERHEAD_BUDGET,
+    }
+    print(f"recorder overhead: peak {100 * (1.0 - ratio_peak):+.2f}% / "
+          f"paired-median {100 * (1.0 - ratio_median):+.2f}% -> gate "
+          f"{100 * overhead:+.2f}% (budget {100 * OVERHEAD_BUDGET:.0f}%)",
+          flush=True)
+    recorder.stop()
+    shutil.rmtree(recorder.out_dir, ignore_errors=True)
+    unarmed.close()
+    armed.close()
+    return row
+
+
+def run(smoke: bool = False, seed: int = 0,
+        out: str = "BENCH_flightrec.json") -> dict:
+    from repro.data.benchmarks import make_metatool_like
+    from repro.embedding.bag_encoder import BagEncoder
+
+    if os.path.dirname(out):
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+
+    bench = make_metatool_like(seed=seed, n_tools=64 if smoke else 199,
+                               n_queries=256 if smoke else 600)
+    enc = BagEncoder(bench.vocab)
+    breach = run_breach(bench, enc, smoke, seed)
+    crash = run_crash(bench, enc, smoke, seed)
+    overhead = run_recorder_overhead(bench, enc, smoke, seed)
+    report = {
+        "bench": "flightrec",
+        "breach": breach,
+        "crash": crash,
+        "overhead": overhead,
+        "derived": {
+            "breach_dumps": breach["dumps_written"],
+            "breach_suppressed": breach["dumps_suppressed"],
+            "crash_dumps": crash["dumps_written"],
+            "recorder_overhead_frac": overhead["overhead_frac"],
+            "overhead_budget": OVERHEAD_BUDGET,
+            "smoke": smoke,
+        },
+    }
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"flightrec smoke: breach->1 dump, crash->1 dump, recorder "
+          f"overhead {100 * overhead['overhead_frac']:+.2f}% "
+          f"(budget {100 * OVERHEAD_BUDGET:.0f}%) -> {out}")
+    # the overhead gate runs LAST so the artifact is always written for
+    # inspection before a violation exits nonzero
+    if overhead["overhead_frac"] > OVERHEAD_BUDGET:
+        raise SystemExit(
+            f"armed recorder overhead {100 * overhead['overhead_frac']:.2f}% "
+            f"exceeds the {100 * OVERHEAD_BUDGET:.0f}% budget on both "
+            f"estimators (peak ratio {overhead['qps_ratio_peak']:.4f}, "
+            f"paired-median ratio {overhead['qps_ratio_median']:.4f})"
+        )
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced scale for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_flightrec.json")
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, seed=args.seed, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ def _suite_registry():
     """name -> run(smoke=..., seed=..., out=...) for the subsystem benches."""
     from benchmarks import (
         control_bench,
+        flightrec_bench,
         index_bench,
         learn_bench,
         obs_bench,
@@ -42,6 +43,7 @@ def _suite_registry():
         "learn": learn_bench.run,
         "obs": obs_bench.run,
         "slo": slo_bench.run,
+        "flightrec": flightrec_bench.run,
     }
 
 
@@ -53,7 +55,7 @@ def main(argv=None) -> None:
                     help="deprecated alias for --smoke")
     ap.add_argument("--tables", default="all",
                     help="comma list of paper tables and/or suites "
-                         "(router,control,index,learn,obs,slo)")
+                         "(router,control,index,learn,obs,slo,flightrec)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     smoke = args.smoke or args.fast

@@ -60,3 +60,10 @@ python -m benchmarks.obs_bench --smoke --out BENCH_obs_smoke.json
 # swap must raise the label-free quality_drift event BEFORE the labelled
 # TableGuard rollback
 python -m benchmarks.slo_bench --smoke --out BENCH_slo_smoke.json
+
+# flightrec_bench gates the black-box layer: an injected SLO breach must
+# produce exactly one debounced dump (follow-on triggers suppressed) with
+# resolvable traces and live version stamps that `repro-obs replay`
+# renders, an injected controller crash must produce exactly one crash
+# dump, and an armed recorder must keep serving qps inside the 5% budget
+python -m benchmarks.flightrec_bench --smoke --out BENCH_flightrec_smoke.json

@@ -106,14 +106,17 @@ class RetraceMonitor:
 
 
 def hot_path_monitor() -> RetraceMonitor:
-    """Monitor pre-loaded with the route_batch hot-path entry points."""
-    from repro.core import reranker, retrieval
-    from repro.router import stages as stages_mod
+    """Monitor pre-loaded with the route_batch hot-path entry points.
+
+    Sourced from `repro.router.gateway.hot_path_jits` — the gateway owns
+    the list, so this CI leg and the live `obs.profile.JitProfiler` can
+    never silently watch different program sets.
+    """
+    from repro.router.gateway import hot_path_jits
 
     mon = RetraceMonitor()
-    mon.track("topk_dense", retrieval.topk_dense)
-    mon.track("adapter_apply", stages_mod._adapter_apply_j)
-    mon.track("rerank_topk_scored", reranker.rerank_topk_scored)
+    for name, fn in hot_path_jits().items():
+        mon.track(name, fn)
     return mon
 
 

@@ -106,6 +106,7 @@ class RefinementController:
         refine_fn: Callable = refine_with_gate,  # injectable for tests
         indexes: Sequence = (),  # ToolIndexManagers to keep fresh across swaps
         bus: Optional["EventBus"] = None,  # repro.obs.events lifecycle surface
+        flight_recorder=None,  # repro.obs.flightrec — daemon crash dumps
     ):
         self.db = db
         self.store = store
@@ -122,6 +123,10 @@ class RefinementController:
         # lifecycle events (cooldown, gate_reject, loop_error transitions) go
         # to the bus; successful swaps reach it via `EventBus.watch_db`
         self.bus = bus
+        # black-box hook: a daemon-step crash dumps the full telemetry state
+        # (works without a bus; the recorder's debounce dedupes against the
+        # loop_error event when both paths are wired)
+        self.flight_recorder = flight_recorder
         self.reports: List[ControllerReport] = []
         # the daemon loop's health surface: the most recent step() exception,
         # cleared by the next successful step — a dashboard/health check polls
@@ -293,10 +298,21 @@ class RefinementController:
                                          controller=type(self).__name__)
                     self.last_loop_error = None
                 except Exception as exc:  # survive transient failures
-                    if self.last_loop_error is None and self.bus is not None:
-                        self.bus.publish("loop_error", plane="control",
-                                         controller=type(self).__name__,
-                                         error=repr(exc))
+                    if self.last_loop_error is None:
+                        # crash dump FIRST (reason "crash", full exception),
+                        # so the loop_error publish below debounces into it
+                        # rather than racing it for the dump slot
+                        if self.flight_recorder is not None:
+                            try:
+                                self.flight_recorder.record_crash(
+                                    exc, source=type(self).__name__
+                                )
+                            except Exception:  # noqa: BLE001 — never rethrow
+                                pass  # the black box must not kill the loop
+                        if self.bus is not None:
+                            self.bus.publish("loop_error", plane="control",
+                                             controller=type(self).__name__,
+                                             error=repr(exc))
                     self.last_loop_error = exc
                     self.reports.append(
                         ControllerReport(

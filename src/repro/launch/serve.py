@@ -11,6 +11,8 @@ and a backend model pool doing real prefill+decode on a reduced config.
 from __future__ import annotations
 
 import argparse
+import signal
+import sys
 import time
 
 import jax
@@ -25,13 +27,18 @@ from repro.models import model as M
 from repro.models.config import reduced
 from repro.obs import (
     EventBus,
+    FlightRecorder,
     HealthMonitor,
+    JitProfiler,
     ObsServer,
+    QualityConfig,
     QualityMonitor,
     RouteTracer,
+    SamplingProfiler,
     SLOEngine,
     TimeSeriesRing,
     get_registry,
+    stamp_router_costs,
 )
 from repro.router.gateway import SemanticRouter
 from repro.router.latency import measure_latency, percentile_stats
@@ -155,6 +162,14 @@ def main(argv=None):
     ap.add_argument("--trace-export", metavar="PATH", default=None,
                     help="write sampled route traces as JSONL on exit "
                          "(render with `repro-obs PATH`)")
+    ap.add_argument("--dump-dir", metavar="DIR", default=None,
+                    help="flight-recorder black-box dumps land here on "
+                         "slo_burn/quality_drift/loop_error/rollback/"
+                         "demotion or a fatal crash "
+                         "(postmortem: `repro-obs replay DIR`)")
+    ap.add_argument("--profile-daemons", action="store_true",
+                    help="opt-in sampling wall-clock profiler over the "
+                         "cadence daemons (exported at /profile)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -164,7 +179,8 @@ def main(argv=None):
     # ring + SLO engine + quality monitor) watches all three
     bus = EventBus()
     tracer = RouteTracer(sample_every=max(args.trace_every, 1), seed=args.seed)
-    quality = QualityMonitor(registry=get_registry(), bus=bus)
+    quality = QualityMonitor(QualityConfig(drift_every=4),
+                             registry=get_registry(), bus=bus)
     cleanups = []
 
     print("== building tool benchmark + OATS control plane ==")
@@ -180,17 +196,81 @@ def main(argv=None):
     slo_engine = SLOEngine(ring, bus=bus, registry=get_registry())
     monitor = HealthMonitor(routers=[router], indexes=[router.index], bus=bus,
                             slo=slo_engine)
+    # live compile telemetry over the gateway's hot jits: the router build
+    # above warmed them, so the first collect() is the warmup baseline and
+    # anything counted after it is a production retrace
+    profiler = JitProfiler(registry=get_registry())
+    profiler.collect()
+    stamp_router_costs(profiler, router, batch_size=args.route_batch)
+    recorder = None
+    if args.dump_dir:
+        recorder = FlightRecorder(
+            args.dump_dir, bus=bus, registry=get_registry(), tracer=tracer,
+            ring=ring, slo=slo_engine, health=monitor, profiler=profiler,
+            routers=[router],
+        )
+        print(f"== flight recorder armed: dumps -> {args.dump_dir} ==")
+    sampler = SamplingProfiler() if args.profile_daemons else None
     obs_server = None
     if args.metrics_port is not None:
-        # the ring's cadence is also the SLO judgement cadence: one daemon
-        # snapshots the registry and evaluates burn rates on every tick
-        ring.start(interval_s=1.0, on_tick=lambda r: slo_engine.evaluate())
+        # the ring's cadence is also the SLO judgement cadence (and the
+        # compile-cache poll): one daemon snapshots the registry, counts
+        # post-warmup jit compiles, and evaluates burn rates on every tick
+        ring.start(
+            interval_s=1.0,
+            on_tick=lambda r: (profiler.collect(), slo_engine.evaluate()),
+        )
+        if sampler is not None:
+            sampler.watch_thread(ring.thread(), "timeseries-ring")
+            sampler.start()
         obs_server = ObsServer(monitor, get_registry(), bus,
                                port=args.metrics_port,
-                               slo=slo_engine, tracer=tracer).start()
+                               slo=slo_engine, tracer=tracer,
+                               recorder=recorder, profiler=profiler,
+                               sampler=sampler).start()
         print(f"== obs: http://{obs_server.host}:{obs_server.port}"
-              f"{{/metrics,/health,/events,/slo,/traces}} ==")
+              f"{{/metrics,/health,/events,/slo,/traces,/dumps,/profile}} ==")
 
+    # orderly teardown, shared by the normal exit path and the signal path:
+    # recorder first (stop turning shutdown noise into dumps), then the
+    # cadence daemons, then the HTTP surface, then the db listeners this
+    # process attached — idempotent end to end, so signal-then-finally is
+    # safe
+    def _shutdown(*_sig):
+        if recorder is not None:
+            recorder.stop()
+        if sampler is not None:
+            sampler.stop()
+        ring.stop()
+        if obs_server is not None:
+            obs_server.stop()
+        while cleanups:
+            cleanups.pop()()
+
+    try:
+        # orderly stop on SIGTERM; signal handlers only install from the
+        # main thread (tests drive main() from workers — skip there)
+        signal.signal(signal.SIGTERM,
+                      lambda *sig: (_shutdown(), sys.exit(143)))
+    except ValueError:
+        pass
+
+    # fatal-exception hook: anything that kills the serving body below
+    # becomes one black-box dump before the process dies — the launcher
+    # analogue of the controllers' daemon-loop crash hook
+    try:
+        return _serve_body(args, bench, router, pipe, bus, tracer, quality,
+                           monitor)
+    except BaseException as exc:
+        if recorder is not None and not isinstance(exc, SystemExit):
+            recorder.record_crash(exc, source="launch.serve")
+        raise
+    finally:
+        _shutdown()
+        router.close()
+
+
+def _serve_body(args, bench, router, pipe, bus, tracer, quality, monitor):
     print("== loading backend pool ==")
     cfg = get_config(args.arch)
     if args.smoke:
@@ -270,16 +350,8 @@ def main(argv=None):
             print(f"  {stage:8s}: {d.action} {d.reason}")
         print(f"live stages: {sorted(report.active) or '(none)'} "
               f"(stage v{report.stage_version})")
-    # orderly shutdown: stop the cadence daemon and the HTTP server, then
-    # unregister every db listener this process attached (bus/quality
-    # watches + the router-owned index manager) so nothing leaks if the
-    # database outlives this serve invocation (tests reuse interpreters)
-    ring.stop()
-    if obs_server is not None:
-        obs_server.stop()
-    for fn in cleanups:
-        fn()
-    router.close()
+    # shutdown (recorder -> daemons -> server -> listeners -> router) runs
+    # in main()'s finally via _shutdown, shared with the SIGTERM path
     return stats
 
 

@@ -166,6 +166,7 @@ class LearningController:
         # injectable for tests; production keeps the §7.3 decision table
         plan_fn: Callable[[int, int], DeploymentPlan] = recommend_stages,
         bus: Optional["EventBus"] = None,  # repro.obs.events lifecycle surface
+        flight_recorder=None,  # repro.obs.flightrec — daemon crash dumps
     ):
         self.db = db
         self.store = store
@@ -184,6 +185,10 @@ class LearningController:
         # lifecycle events (promotion, gate_reject, cooldown, loop_error
         # transitions); demotions reach the bus via the StageGuard's own bus
         self.bus = bus
+        # black-box hook: a daemon-step crash dumps the full telemetry state
+        # (works without a bus; the recorder's debounce dedupes against the
+        # loop_error event when both paths are wired)
+        self.flight_recorder = flight_recorder
         self.reports: List[LearnReport] = []
         # daemon-loop health surface: most recent step() exception, cleared
         # by the next successful step (mirrors RefinementController) — a
@@ -435,10 +440,21 @@ class LearningController:
                                          controller=type(self).__name__)
                     self.last_loop_error = None
                 except Exception as exc:  # survive transient failures
-                    if self.last_loop_error is None and self.bus is not None:
-                        self.bus.publish("loop_error", plane="learn",
-                                         controller=type(self).__name__,
-                                         error=repr(exc))
+                    if self.last_loop_error is None:
+                        # crash dump FIRST (reason "crash", full exception),
+                        # so the loop_error publish below debounces into it
+                        # rather than racing it for the dump slot
+                        if self.flight_recorder is not None:
+                            try:
+                                self.flight_recorder.record_crash(
+                                    exc, source=type(self).__name__
+                                )
+                            except Exception:  # noqa: BLE001 — never rethrow
+                                pass  # the black box must not kill the loop
+                        if self.bus is not None:
+                            self.bus.publish("loop_error", plane="learn",
+                                             controller=type(self).__name__,
+                                             error=repr(exc))
                     self.last_loop_error = exc
                     self.reports.append(
                         LearnReport(plan=None, reason=f"step failed: {exc!r}")

@@ -40,6 +40,28 @@ On top of those recorders sits the judgement layer (PR 7):
   links a p99 reading to a concrete `RouteTrace` (rendered by
   ``repro-obs watch`` and the `/slo` snapshot).
 
+And on top of the judges sits the memory layer (PR 9) — record → judge →
+**remember**:
+
+* `repro.obs.flightrec` — `FlightRecorder`: on a trigger event
+  (``slo_burn``, ``quality_drift``, ``loop_error``, ``rollback``,
+  ``demotion``) or a fatal crash (`record_crash`, hooked into
+  `launch/serve.py` and both controller daemon loops) it freezes the whole
+  telemetry state — event ring, sampled traces, metrics snapshot,
+  `TimeSeriesRing` window, health/SLO state, version stamps — into one
+  atomic, debounced, retention-capped dump directory. ``/dumps`` lists
+  them live; ``repro-obs replay <dump-dir>`` renders the postmortem
+  timeline offline.
+* `repro.obs.profile` — `JitProfiler`: the live twin of PR 5's retrace CI
+  leg. Polls the hot-path jits' compile caches
+  (`repro.router.gateway.hot_path_jits`) on the ring cadence —
+  first collect baselines warmup, after that every cache growth counts as
+  ``jit_compiles_total{fn=}`` (feeding `default_slos()`'s
+  ``jit_retrace_rate``) — and stamps per-program FLOPs / bytes-accessed
+  via XLA ``cost_analysis`` (`stamp_router_costs`), all exported at
+  ``/profile``. `SamplingProfiler` adds an opt-in wall-clock sampler over
+  the cadence daemons (``--profile-daemons``).
+
 `repro.obs.clock` is the canonical timing module for `router/`, `index/`,
 `control/`, and `learn/` (the `obs-discipline` lint rule enforces it), and
 `repro.obs.summary` is the one percentile implementation
@@ -70,8 +92,8 @@ index_rebuilds_total / index_build_failures_total (counter)
 index_build_ms (histogram)
     Build durations (k-means rebuilds dominate).
 route_score_gap (histogram)
-    Per-query top-1 minus top-2 score (routing confidence; recorded via
-    `record_many`, one vectorized pass per batch).
+    Per-query top-1 minus top-2 score (routing confidence; one vectorized
+    `record_many` pass, sampled 1-in-4 batches).
 quality_ndcg{k=} / quality_recall{k=} (gauge)
     `QualityMonitor`'s rolling labelled-traffic means.
 quality_drift_score (gauge)
@@ -80,6 +102,14 @@ quality_drift_score (gauge)
 slo_burning{slo=} / slo_burn_rate{slo=} (gauge)
     Per-SLO breach state (0/1) and worst long-window burn rate, updated
     on every `SLOEngine.evaluate`.
+jit_compiles_total{fn=} (counter)
+    Post-warmup XLA compiles per hot-path jit (`JitProfiler.collect`
+    cache-growth deltas; fn names from `hot_path_jits()`) — the live
+    retrace signal behind the ``jit_retrace_rate`` SLO.
+jit_cache_size{fn=} (gauge)
+    Absolute compile-cache size per hot-path jit (warmup included).
+flightrec_dumps_total / flightrec_suppressed_total (counter)
+    Black-box dumps written vs suppressed by the debounce window.
 
 Event catalog (kind / plane / required detail stamps)
 =====================================================
@@ -117,9 +147,21 @@ slo_recovered / serve — slo, sli
 quality_drift / serve — score, threshold, table_version
     The query-population EWMA left the live table's population stats
     (rising edge only; re-arms when the score falls back under).
+
+The flight recorder consumes (never publishes) bus events: its trigger
+set is exactly {slo_burn, quality_drift, loop_error, rollback, demotion}
+plus out-of-band crashes, and a dump only reads latched judgement state
+(`SLOEngine.burning`), so recording can never cause the transitions it
+records.
 """
 from repro.obs import clock
 from repro.obs.events import Event, EventBus
+from repro.obs.flightrec import (
+    FlightRecorder,
+    list_dumps,
+    load_dump,
+    render_replay,
+)
 from repro.obs.health import HealthMonitor, ObsServer
 from repro.obs.metrics import (
     Counter,
@@ -129,6 +171,7 @@ from repro.obs.metrics import (
     default_edges,
     get_registry,
 )
+from repro.obs.profile import JitProfiler, SamplingProfiler, stamp_router_costs
 from repro.obs.quality import QualityConfig, QualityMonitor, RollingWindows
 from repro.obs.slo import SLO, BurnWindow, SLOEngine, default_slos
 from repro.obs.summary import LatencyStats, percentile_stats, stats_from_histogram
@@ -162,4 +205,11 @@ __all__ = [
     "QualityConfig",
     "QualityMonitor",
     "RollingWindows",
+    "FlightRecorder",
+    "list_dumps",
+    "load_dump",
+    "render_replay",
+    "JitProfiler",
+    "SamplingProfiler",
+    "stamp_router_costs",
 ]

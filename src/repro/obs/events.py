@@ -88,6 +88,15 @@ class EventBus:
         with self._lock:
             self._subscribers.append(fn)
 
+    def unsubscribe(self, fn: Callable[[Event], None]) -> None:
+        """Detach a subscriber; a no-op if it was never (or already no
+        longer) attached, so teardown paths can call it unconditionally."""
+        with self._lock:
+            try:
+                self._subscribers.remove(fn)
+            except ValueError:
+                pass
+
     def watch_db(self, db) -> Callable[[], None]:
         """Publish a "swap" event for every table version change on `db`.
 

@@ -25,10 +25,14 @@ evaluation sees the burn gone).
 ``/metrics`` (Prometheus text exposition from the registry), ``/health``
 (this snapshot as JSON; 503 on "error" so load-balancer checks fail over),
 ``/events?since=N`` (bus tail), ``/slo`` (the SLO engine's burn-rate
-snapshot), and ``/traces?since=N`` / ``/traces?id=N`` (the tracer ring —
-how `repro-obs watch` resolves a p99 exemplar id into its RouteTrace). It
-is a daemon-threaded stdlib server — zero deps, good for one scraper and
-a curl, not a public ingress.
+snapshot), ``/traces?since=N`` / ``/traces?id=N`` (the tracer ring — how
+`repro-obs watch` resolves a p99 exemplar id into its RouteTrace),
+``/dumps`` (the flight recorder's retained black-box dumps: manifests +
+recorder counters, the live half of ``repro-obs replay``), and
+``/profile`` (the JitProfiler's per-program compile counters, cache sizes,
+and stamped FLOPs/bytes, plus the sampling profiler's stacks when one is
+attached). It is a daemon-threaded stdlib server — zero deps, good for
+one scraper and a curl, not a public ingress.
 """
 from __future__ import annotations
 
@@ -131,12 +135,18 @@ class ObsServer:
         port: int = 0,  # 0 = ephemeral; read `.port` after construction
         slo: Optional["SLOEngine"] = None,  # repro.obs.slo
         tracer: Optional["RouteTracer"] = None,  # repro.obs.trace
+        recorder: Optional["FlightRecorder"] = None,  # repro.obs.flightrec
+        profiler: Optional["JitProfiler"] = None,  # repro.obs.profile
+        sampler: Optional["SamplingProfiler"] = None,  # repro.obs.profile
     ):
         self.monitor = monitor or HealthMonitor()
         self.registry = registry or get_registry()
         self.bus = bus
         self.slo = slo
         self.tracer = tracer
+        self.recorder = recorder
+        self.profiler = profiler
+        self.sampler = sampler
         server = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -189,6 +199,23 @@ class ObsServer:
                             if t.trace_id > since]
                     self._send(200, json.dumps(recs, indent=2),
                                "application/json")
+                elif url.path == "/dumps" and server.recorder is not None:
+                    body = {
+                        "recorder": server.recorder.summary(),
+                        "dumps": [
+                            {"name": d.name, "path": d.path,
+                             "manifest": d.manifest}
+                            for d in server.recorder.list()
+                        ],
+                    }
+                    self._send(200, json.dumps(body, indent=2),
+                               "application/json")
+                elif url.path == "/profile" and server.profiler is not None:
+                    body = server.profiler.snapshot()
+                    if server.sampler is not None:
+                        body["sampling"] = server.sampler.snapshot()
+                    self._send(200, json.dumps(body, indent=2),
+                               "application/json")
                 else:
                     self._send(404, "not found\n", "text/plain")
 
@@ -205,10 +232,13 @@ class ObsServer:
         self._thread.start()
         return self
 
-    def stop(self) -> None:
+    def stop(self, timeout_s: float = 5.0) -> None:
+        """Idempotent shutdown: stop accepting, join with a bounded wait,
+        release the socket. Safe to call from a signal path and again from
+        an atexit/finally path — the second call is a no-op."""
         if self._thread is None:
             return
         self._httpd.shutdown()
-        self._thread.join()
+        self._thread.join(timeout=timeout_s)
         self._httpd.server_close()
         self._thread = None

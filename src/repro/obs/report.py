@@ -6,6 +6,8 @@
   repro-obs --health http://127.0.0.1:9100 # pretty-print a live /health
   repro-obs --follow http://127.0.0.1:9100 # tail the live event bus
   repro-obs --watch  http://127.0.0.1:9100 # live health+SLO+exemplar panel
+  repro-obs replay dumps/dump-...-slo_burn # postmortem a flight-recorder dump
+  repro-obs replay dumps/                  # ...or the newest dump under a root
 
 Reads the JSONL a `RouteTracer.export_jsonl` wrote (one RouteTrace per
 line) and prints per-phase latency percentiles, the path/bucket mix, and
@@ -16,6 +18,13 @@ using the bus's monotone ``since=`` cursor (every retained event exactly
 once), and ``--watch`` renders a periodic panel of ``/health`` + ``/slo``,
 resolving any burning latency SLO's p99 exemplar through ``/traces?id=``
 into the actual RouteTrace spans.
+
+``replay`` is the offline postmortem surface: given a FlightRecorder dump
+directory (or a dump root, where it picks the newest), it renders the
+recorded timeline — bus events interleaved with sampled trace spans around
+the trigger, plus the SLO/health/version state frozen at dump time
+(`repro.obs.flightrec.render_replay`). It needs no live server: the dump
+is self-contained, which is the point of a black box.
 """
 from __future__ import annotations
 
@@ -32,6 +41,7 @@ __all__ = [
     "main",
     "render_trace_report",
     "render_watch_panel",
+    "replay",
     "watch",
 ]
 
@@ -230,9 +240,37 @@ def _render_health(url: str) -> str:
     return json.dumps(snap, indent=2) + "\n"
 
 
+def replay(dump_path: str, window_s: float = 60.0, out=None) -> int:
+    """Render a flight-recorder dump (or the newest under a dump root).
+
+    Returns 0 on success, 2 when the path holds no readable dump.
+    """
+    import os
+
+    from repro.obs.flightrec import list_dumps, render_replay
+
+    out = out or sys.stdout
+    path = dump_path.rstrip("/")
+    if not os.path.exists(os.path.join(path, "manifest.json")):
+        dumps = list_dumps(path)
+        if not dumps:
+            out.write(f"no flight dumps under {dump_path}\n")
+            return 2
+        out.write(f"{len(dumps)} dump(s) under {path}; replaying newest\n")
+        path = dumps[-1].path
+    out.write(render_replay(path, window_s=window_s))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("trace", nargs="?", help="JSONL file from RouteTracer.export_jsonl")
+    ap.add_argument("trace", nargs="?",
+                    help="JSONL file from RouteTracer.export_jsonl, or the "
+                         "literal 'replay' to postmortem a flight dump")
+    ap.add_argument("dump", nargs="?",
+                    help="flight-recorder dump directory (with 'replay')")
+    ap.add_argument("--window", type=float, default=60.0, metavar="S",
+                    help="replay timeline span before the dump (seconds)")
     ap.add_argument("--since", type=float, metavar="TS", default=None,
                     help="only report JSONL traces with ts >= TS "
                          "(wall-clock epoch seconds)")
@@ -250,6 +288,10 @@ def main(argv=None) -> int:
     ap.add_argument("--iterations", type=int, default=0,
                     help="stop --watch after N frames (0 = forever)")
     args = ap.parse_args(argv)
+    if args.trace == "replay":
+        if not args.dump:
+            ap.error("replay needs a dump directory")
+        return replay(args.dump, window_s=args.window)
     if args.health:
         sys.stdout.write(_render_health(args.health))
         return 0

@@ -136,6 +136,22 @@ def default_slos() -> Tuple[SLO, ...]:
             event_keys=("route_outcomes_dropped_total", "bus_dropped_total"),
             max_per_hour=60.0,
         ),
+        SLO(
+            name="jit_retrace_rate",
+            kind="rate",
+            description="post-warmup XLA compiles on the hot path stay rare "
+                        "(a sustained rate means batches escaping the "
+                        "power-of-two buckets or churning generations); "
+                        "counters come from obs.profile.JitProfiler.collect",
+            # keys mirror repro.router.gateway.hot_path_jits() — the
+            # profiler labels its counters with those names
+            event_keys=(
+                'jit_compiles_total{fn="topk_dense"}',
+                'jit_compiles_total{fn="adapter_apply"}',
+                'jit_compiles_total{fn="rerank_topk_scored"}',
+            ),
+            max_per_hour=12.0,
+        ),
     )
 
 

@@ -186,11 +186,17 @@ class TimeSeriesRing:
         return self
 
     def stop(self, timeout_s: float = 5.0) -> None:
+        """Idempotent: signals the ticker and joins with a bounded wait."""
         if self._thread is None:
             return
         self._stop.set()
         self._thread.join(timeout=timeout_s)
         self._thread = None
+
+    def thread(self) -> Optional[threading.Thread]:
+        """The cadence daemon (None unless started) — what the opt-in
+        sampling profiler watches."""
+        return self._thread
 
     # ---------------------------------------------------------------- reading
     def __len__(self) -> int:

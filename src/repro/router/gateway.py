@@ -75,9 +75,36 @@ from repro.obs.metrics import MetricsRegistry, get_registry
 from repro.router.stages import StageSet
 from repro.router.tooldb import ConflictError, ToolsDatabase
 
-__all__ = ["RouteResult", "OutcomeEvent", "SemanticRouter", "StageSet"]
+__all__ = [
+    "RouteResult",
+    "OutcomeEvent",
+    "SemanticRouter",
+    "StageSet",
+    "hot_path_jits",
+]
 
 PHASES = ("embed", "adapter", "score", "rerank", "assemble")
+
+
+def hot_path_jits() -> "OrderedDict[str, Callable]":
+    """The jitted entry points `route_batch` dispatches to, by name.
+
+    This is the single registry of "programs whose compile behavior is a
+    serving concern": `analysis.retrace.hot_path_monitor` (the CI leg) and
+    `obs.profile.JitProfiler` (the live compile/cost telemetry) both source
+    from it, so adding a jit to the hot path automatically puts it under
+    both the offline invariant and the production counters.
+    """
+    from repro.core import retrieval
+    from repro.router import stages as stages_mod
+
+    return OrderedDict(
+        (
+            ("topk_dense", retrieval.topk_dense),
+            ("adapter_apply", stages_mod._adapter_apply_j),
+            ("rerank_topk_scored", reranker_lib.rerank_topk_scored),
+        )
+    )
 
 
 class _GatewayInstruments:
@@ -209,6 +236,7 @@ class SemanticRouter:
             registry = metrics if isinstance(metrics, MetricsRegistry) else get_registry()
             self._obs = _GatewayInstruments(registry)
         self._tracer = tracer
+        self._gap_tick = 0  # score-gap 1-in-4 batch sampling counter
         self._bus = bus
         # streaming quality observability (repro.obs.quality): route_batch
         # feeds it raw query embeddings for label-free drift detection
@@ -464,13 +492,20 @@ class SemanticRouter:
                 obs.table_version.set(table_version)
                 obs.stage_version.set(stage_version)
                 if top_scores.shape[1] >= 2:
-                    # one vectorized pass over the batch (see score_gap note
-                    # in _GatewayInstruments); rows with < 2 valid candidates
-                    # carry the NEG_INF sentinel in slot 1 and are skipped
-                    valid2 = top_scores[:, 1] > NEG_INF / 2
-                    if np.any(valid2):
-                        gaps = top_scores[:, 0] - top_scores[:, 1]
-                        obs.score_gap.record_many(gaps[valid2])
+                    # sampled 1-in-4 batches: the gap histogram feeds
+                    # percentile summaries (confidence()), which a quarter
+                    # of the traffic estimates as well as all of it — and
+                    # this is the priciest per-batch obs block (a vectorized
+                    # pass + record_many). Racy tick increment is fine: the
+                    # sampling needs to be approximate, not exact.
+                    self._gap_tick += 1
+                    if self._gap_tick % 4 == 0:
+                        # rows with < 2 valid candidates carry the NEG_INF
+                        # sentinel in slot 1 and are skipped
+                        valid2 = top_scores[:, 1] > NEG_INF / 2
+                        if np.any(valid2):
+                            gaps = top_scores[:, 0] - top_scores[:, 1]
+                            obs.score_gap.record_many(gaps[valid2])
         if self._quality is not None:
             # raw pre-adapter embeddings, unpadded rows: drift is about the
             # query population vs the live table, not about learned stages

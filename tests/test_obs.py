@@ -153,6 +153,23 @@ def test_prometheus_rendering_cumulative_buckets():
     assert "lat_ms_count 5" in lines
 
 
+def test_prometheus_label_values_are_escaped():
+    # text-format spec: label values escape backslash, double-quote, and
+    # newline (regression: these were emitted raw, producing an exposition
+    # a scraper rejects — or worse, silently mis-parses into wrong series)
+    reg = MetricsRegistry()
+    reg.counter("odd_total", path='a"b\\c\nd').inc()
+    text = reg.render_prometheus()
+    assert 'odd_total{path="a\\"b\\\\c\\nd"} 1.0' in text.splitlines()
+    # backslash is escaped first, so a literal backslash-n label value stays
+    # distinct from a real newline after escaping
+    reg.counter("odd_total", path="\\n").inc()
+    text = reg.render_prometheus()
+    assert 'odd_total{path="\\\\n"} 1.0' in text.splitlines()
+    assert 'odd_total{path="a\\"b\\\\c\\nd"} 1.0' in text.splitlines()
+    assert len(reg.instruments()) == 2
+
+
 def test_snapshot_shape_and_label_keys():
     reg = MetricsRegistry()
     reg.counter("n_total").inc()

@@ -358,6 +358,7 @@ def test_default_slos_cover_the_catalog_and_stay_quiet_without_data():
         "exact_fallback_ratio",
         "guard_rollback_rate",
         "drop_rate",
+        "jit_retrace_rate",
     ]
     reg = MetricsRegistry()
     engine = SLOEngine(TimeSeriesRing(reg), registry=reg)
