@@ -1,0 +1,301 @@
+"""Route-cache benchmark: hit-rate x qps x p99 on Zipfian near-dup traffic.
+
+  PYTHONPATH=src python -m benchmarks.cache_bench [--smoke] [--out BENCH_cache.json]
+
+Replays the IDENTICAL seeded traffic stream (`repro.traffic`) through a bare
+`SemanticRouter` and one fronted by `SemanticRouteCache`, at Zipf exponents
+s in {0.8, 1.1, 1.4}, on a 25k-tool corpus (`scale_tool_corpus`) where the
+score+top-K path is memory-bound and worth skipping. Queries come from the
+metatool-like benchmark's own train split (token-tiled to length 24 so the
+bag-encoder direction is preserved exactly while one-token paraphrase jitter
+stays inside the cache's cosine threshold), so routing decisions are real
+tool resolutions, not noise.
+
+A second leg replays the s=1.1 stream under adversarial churn — hot-set
+rotations in the generator plus control-plane table swaps and StageSet
+promotions fired between batches — and holds the staleness gate: every
+served `(table_version, stage_version)` must lie inside the live version
+window around its `route_batch` call (`repro.traffic.drive` checks each
+result; the gateway's own tripwire counter must also stay 0).
+
+CI gates (checked AFTER the artifact is written, `--smoke` and full):
+  * zero stale-version serves, in every leg;
+  * hit-rate on the s=1.1 curve above the floor (warm cache, near-dup
+    traffic: misses should be first-sights and paraphrase LSH escapes only);
+  * churn-leg p99 within budget x the bare router's p99 on the same
+    stream shape (a swap costs the cache its contents, never the batch a
+    multi-ms stall).
+Full run only (smoke's shorter streams are warm-up dominated):
+  * effective qps >= 2x bare at s=1.1;
+  * top-1 routing agreement with the bare replay >= 0.98 at s=1.1.
+
+Results land in BENCH_cache.json:
+  {"rows": [{zipf_s, hit_rate, qps_cached, qps_bare, speedup, agreement,
+             p99_cached_ms, p99_bare_ms, stale_serves, ...}, ...],
+   "churn": {...}, "derived": {...}, "gates": {...}}
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import gc
+import json
+import os
+from typing import List, Optional
+
+import numpy as np
+
+ZIPF_CURVE = (0.8, 1.1, 1.4)
+QUERY_LEN = 24  # tiled intent length: 1-token jitter keeps cosine ~0.958
+WARMUP_BATCH_SIZES = (1, 2, 4, 8, 16, 32)  # every pow2 bucket the stream hits
+
+
+def _corpus(smoke: bool, seed: int):
+    """(bench, records, table, encoder) at the bench scale.
+
+    `noise=0.2` is per-dimension, i.e. a perturbation of norm ~3.9 in 384-d:
+    clones become inert decoys and top-1 competition stays among the 199
+    real tools (the default 0.02 keeps clones at cosine ~0.93 of their
+    source, making top-1 a coin flip between clone and original — that
+    measures clone degeneracy, not cache agreement).
+    """
+    from repro.data.benchmarks import make_metatool_like, scale_tool_corpus
+    from repro.embedding.bag_encoder import BagEncoder
+    from repro.router.tooldb import ToolRecord
+
+    n_tools = 6_000 if smoke else 25_000
+    bench = make_metatool_like(seed=seed, n_queries=400)
+    enc = BagEncoder(bench.vocab)
+    base = enc.encode(bench.desc_tokens)
+    table = scale_tool_corpus(base, n_tools, seed=seed, noise=0.2)
+    records = [
+        ToolRecord(i, f"t{i}", bench.desc_tokens[i % bench.n_tools], 0)
+        for i in range(n_tools)
+    ]
+    return bench, records, table, enc
+
+
+def _tiled_pool(bench) -> List[np.ndarray]:
+    """Train-split queries tiled to QUERY_LEN tokens: tiling a bag of tokens
+    scales every count uniformly, so the embedding direction is bit-for-bit
+    the original's while paraphrase jitter (drop+append one of 24) is mild."""
+    return [
+        np.tile(t, -(-QUERY_LEN // len(t)))
+        for t in (bench.query_tokens[i] for i in bench.train_idx)
+    ]
+
+
+def _build_router(records, table, enc, cache):
+    from repro.router.gateway import SemanticRouter
+    from repro.router.tooldb import ToolsDatabase
+
+    db = ToolsDatabase(list(records), table.copy())
+    return SemanticRouter(
+        db, embed_fn=enc.encode_one, embed_batch_fn=enc.encode,
+        k=5, metrics=False, cache=cache,
+    )
+
+
+@contextlib.contextmanager
+def _nogc():
+    """Collector pauses (20-40 ms here) land on arbitrary batches and a
+    short stream's p99 is its max — same discipline as pinning warmup."""
+    gc.collect()
+    gc.disable()
+    try:
+        yield
+    finally:
+        gc.enable()
+
+
+def _warm(router, batch, cache=None) -> None:
+    """Compile every pow2 miss-bucket shape, then forget the warmup traffic
+    (an unwarmed bucket is a multi-ms retrace the p99 would absorb)."""
+    for m in WARMUP_BATCH_SIZES:
+        router.route_batch(batch[:m])
+    if cache is not None:
+        cache.clear()
+
+
+def _curve_point(records, table, enc, pool, zipf_s: float, n_batches: int,
+                 seed: int) -> dict:
+    """One Zipf exponent: identical stream through bare and cached routers."""
+    from repro.cache import CacheConfig, SemanticRouteCache
+    from repro.traffic import TrafficConfig, ZipfTrafficGenerator, agreement, drive
+
+    cfg = TrafficConfig(
+        zipf_s=zipf_s, pool_size=256, query_len=QUERY_LEN, batch_size=32,
+        paraphrase_p=0.35, jitter_tokens=1, seed=seed + 3,
+    )
+    batches = list(ZipfTrafficGenerator(cfg, pool=pool).stream(n_batches))
+    cache = SemanticRouteCache(CacheConfig(threshold=0.95), metrics=False)
+    cached = _build_router(records, table, enc, cache)
+    bare = _build_router(records, table, enc, None)
+    _warm(cached, batches[0], cache)
+    _warm(bare, batches[0])
+    try:
+        with _nogc():
+            rep_c = drive(cached, batches, record=True)
+        with _nogc():
+            rep_b = drive(bare, batches, record=True)
+        agr = agreement(rep_c.results, rep_b.results)
+    finally:
+        cached.close()
+        bare.close()
+    return {
+        "zipf_s": zipf_s,
+        "batches": rep_c.batches,
+        "queries": rep_c.queries,
+        "hit_rate": rep_c.hit_rate,
+        "qps_cached": rep_c.qps,
+        "qps_bare": rep_b.qps,
+        "speedup": rep_c.qps / rep_b.qps if rep_b.qps else 0.0,
+        "agreement": agr,
+        "p50_cached_ms": rep_c.p50_ms,
+        "p99_cached_ms": rep_c.p99_ms,
+        "p50_bare_ms": rep_b.p50_ms,
+        "p99_bare_ms": rep_b.p99_ms,
+        "stale_serves": rep_c.stale_serves + rep_b.stale_serves,
+        "stale_examples": rep_c.stale_examples + rep_b.stale_examples,
+    }
+
+
+def _churn_leg(records, table, enc, pool, n_batches: int, swap_every: int,
+               seed: int) -> dict:
+    """s=1.1 stream with the cache under active attack: generator hot-set
+    rotations plus mid-stream control-plane churn (table swap / stage
+    promotion / rollback, all CAS'd against the live snapshot). Every swap
+    is content-identical — version bumps that MUST invalidate the cache
+    without changing what correct routing returns — so any stale serve is
+    unambiguously a cache bug, not a routing change."""
+    from repro.cache import CacheConfig, SemanticRouteCache
+    from repro.traffic import TrafficConfig, ZipfTrafficGenerator, drive
+
+    cfg = TrafficConfig(
+        zipf_s=1.1, pool_size=256, query_len=QUERY_LEN, batch_size=32,
+        paraphrase_p=0.35, jitter_tokens=1, seed=seed + 3,
+        hot_set_rotate_every=max(2 * swap_every, 10),
+    )
+    batches = list(ZipfTrafficGenerator(cfg, pool=pool).stream(n_batches))
+    cache = SemanticRouteCache(CacheConfig(threshold=0.95), metrics=False)
+    router = _build_router(records, table, enc, cache)
+    _warm(router, batches[0], cache)
+    swaps = {"table_swap": 0, "rollback": 0, "stage_swap": 0}
+
+    def churn(i: int) -> None:
+        if i == 0 or i % swap_every:
+            return
+        step = (i // swap_every) % 3
+        if step == 0:
+            version, live = router.db.snapshot()
+            router.db.swap_table(live.copy(), expect_current=version)
+            swaps["table_swap"] += 1
+        elif step == 1 and len(router.db.retained_versions()) > 0:
+            router.db.rollback(expect_current=router.db.table_version)
+            swaps["rollback"] += 1
+        else:
+            sv, stages = router.stage_set()
+            router.set_stages(stages, expect_version=sv)
+            swaps["stage_swap"] += 1
+
+    try:
+        with _nogc():
+            rep = drive(router, batches, on_batch=churn)
+        tripwire = 0
+        if router._obs is not None:  # metrics=False here, but stay robust
+            tripwire = int(router._obs.cache_stale.value)
+    finally:
+        router.close()
+    return {
+        "batches": rep.batches,
+        "queries": rep.queries,
+        "hit_rate": rep.hit_rate,
+        "qps": rep.qps,
+        "p50_ms": rep.p50_ms,
+        "p99_ms": rep.p99_ms,
+        "stale_serves": rep.stale_serves,
+        "stale_examples": rep.stale_examples,
+        "tripwire_demotions": tripwire,
+        "swap_every": swap_every,
+        "hot_set_rotate_every": cfg.hot_set_rotate_every,
+        "control_plane_ops": swaps,
+        "cache_invalidations": cache.stats["invalidated"],
+    }
+
+
+def run(smoke: bool = False, seed: int = 0, out: str = "BENCH_cache.json") -> dict:
+    # fail on an unwritable destination BEFORE the minutes of measurement
+    if os.path.dirname(out):
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+
+    n_batches = 40 if smoke else 150
+    curve = (1.1,) if smoke else ZIPF_CURVE
+    bench, records, table, enc = _corpus(smoke, seed)
+    pool = _tiled_pool(bench)
+
+    rows = []
+    for s in curve:
+        row = _curve_point(records, table, enc, pool, s, n_batches, seed)
+        rows.append(row)
+        print(f"zipf s={s:<4} hit={row['hit_rate']:.3f} "
+              f"agreement={row['agreement']:.4f} "
+              f"speedup={row['speedup']:.2f}x "
+              f"p99={row['p99_cached_ms']:.1f}ms (bare {row['p99_bare_ms']:.1f}ms) "
+              f"stale={row['stale_serves']}", flush=True)
+
+    churn = _churn_leg(records, table, enc, pool, n_batches,
+                       swap_every=8 if smoke else 15, seed=seed)
+    print(f"churn       hit={churn['hit_rate']:.3f} p99={churn['p99_ms']:.1f}ms "
+          f"ops={churn['control_plane_ops']} "
+          f"invalidations={churn['cache_invalidations']} "
+          f"stale={churn['stale_serves']}", flush=True)
+
+    s11 = next(r for r in rows if r["zipf_s"] == 1.1)
+    derived = {
+        "n_tools": len(records),
+        "speedup_zipf11": s11["speedup"],
+        "agreement_zipf11": s11["agreement"],
+        "hit_rate_zipf11": s11["hit_rate"],
+        "stale_serves_total": sum(r["stale_serves"] for r in rows)
+                              + churn["stale_serves"],
+        "churn_p99_over_bare": (churn["p99_ms"] / s11["p99_bare_ms"]
+                                if s11["p99_bare_ms"] else 0.0),
+        "smoke": smoke,
+    }
+    # smoke streams are warm-up dominated (first sight of each of the 256
+    # intents is an unavoidable miss), so the floors are looser there; the
+    # >=2x qps and >=0.98 agreement acceptance gates are full-run contracts
+    gates = {
+        "zero_stale": derived["stale_serves_total"] == 0,
+        "hit_rate_floor": s11["hit_rate"] >= (0.70 if smoke else 0.90),
+        "churn_p99_budget": derived["churn_p99_over_bare"] <= 2.5,
+    }
+    if not smoke:
+        gates["speedup_2x"] = s11["speedup"] >= 2.0
+        gates["agreement_098"] = s11["agreement"] >= 0.98
+
+    report = {"bench": "route_cache", "rows": rows, "churn": churn,
+              "derived": derived, "gates": gates}
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    failed = [g for g, ok in gates.items() if not ok]
+    print(f"zipf-1.1: {s11['speedup']:.2f}x qps, "
+          f"agreement {s11['agreement']:.4f}, hit {s11['hit_rate']:.3f} | "
+          f"churn p99 {derived['churn_p99_over_bare']:.2f}x bare | "
+          f"stale {derived['stale_serves_total']} | "
+          f"gates: {'FAILED ' + ','.join(failed) if failed else 'ok'} -> {out}")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced scale for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_cache.json")
+    args = ap.parse_args(argv)
+    report = run(smoke=args.smoke, seed=args.seed, out=args.out)
+    return 1 if any(not ok for ok in report["gates"].values()) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -27,6 +27,7 @@ import time
 def _suite_registry():
     """name -> run(smoke=..., seed=..., out=...) for the subsystem benches."""
     from benchmarks import (
+        cache_bench,
         control_bench,
         flightrec_bench,
         index_bench,
@@ -41,6 +42,7 @@ def _suite_registry():
         "control": control_bench.run,
         "index": index_bench.run,
         "learn": learn_bench.run,
+        "cache": cache_bench.run,
         "obs": obs_bench.run,
         "slo": slo_bench.run,
         "flightrec": flightrec_bench.run,
@@ -55,7 +57,8 @@ def main(argv=None) -> None:
                     help="deprecated alias for --smoke")
     ap.add_argument("--tables", default="all",
                     help="comma list of paper tables and/or suites "
-                         "(router,control,index,learn,obs,slo,flightrec)")
+                         "(router,control,index,learn,cache,obs,slo,"
+                         "flightrec)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     smoke = args.smoke or args.fast

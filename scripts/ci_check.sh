@@ -47,6 +47,14 @@ python -m benchmarks.index_bench --smoke --out BENCH_index_smoke.json
 
 python -m benchmarks.learn_bench --smoke --out BENCH_learn_smoke.json
 
+# cache_bench gates the route cache on Zipfian near-duplicate traffic: any
+# stale-version serve across control-plane churn (swap/rollback/stage
+# promotion mid-stream), a hit-rate below the warm floor on the Zipf-1.1
+# curve, or a churn-leg p99 past budget x the bare router's fails CI
+# (the >=2x qps and >=0.98 agreement acceptance gates run in the full,
+# non-smoke bench: BENCH_cache.json)
+python -m benchmarks.cache_bench --smoke --out BENCH_cache_smoke.json
+
 # obs_bench gates the telemetry plane: instrumented route_batch (including
 # the SLO judgement layer: quality monitor, ticking TimeSeriesRing, SLO
 # engine) must stay within 5% of bare qps, and the threaded lifecycle smoke

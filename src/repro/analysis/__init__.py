@@ -78,6 +78,19 @@ lock-dispatch
     *Fix*: compute outside the critical section, hold the lock only to
     publish (see ``ToolIndexManager._build``).
 
+cache-version-stamp
+    *What*: ``lookup_batch``/``insert_batch`` on a ``*cache*`` receiver
+    without explicit ``table_version=`` AND ``stage_version=`` keywords;
+    plus the lock-dispatch scan applied to the ``cache/`` package.
+    *Why*: the route cache's exact-invalidation guarantee holds only if
+    every entry is stamped with the snapshot its scores came from — an
+    unstamped site can serve a decision from a dead table after a swap.
+    The cache lock is taken per routed batch, so device work under it is
+    the same p99 hazard lock-dispatch polices elsewhere.
+    *Fix*: thread the versions from the same snapshot that produced the
+    scores (the topk's returned version); keep cache critical sections
+    numpy-only.
+
 thread-discipline
     *What*: a ``daemon=True`` thread whose locally-defined loop lacks an
     ``except Exception`` handler, or has one that does not record the

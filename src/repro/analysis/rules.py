@@ -535,6 +535,57 @@ class LockDispatchRule(Rule):
 
 
 @register
+class CacheVersionStampRule(Rule):
+    rule_id = "cache-version-stamp"
+    description = (
+        "A route-cache lookup/insert site missing an explicit "
+        "table_version=/stage_version= stamp, or JAX dispatch (jnp.*/jax.*/"
+        "known jitted entry points) lexically under a lock in the `cache/` "
+        "package — the cache's exact-invalidation story holds only if every "
+        "entry is stamped with the snapshot its scores came from, and the "
+        "cache lock is a hot-path lock the gateway takes per batch."
+    )
+    hint = (
+        "pass table_version=/stage_version= from the same snapshot that "
+        "produced the scores (the topk's returned version, not a racy live "
+        "read); keep cache critical sections numpy-only — dispatch before "
+        "taking the lock"
+    )
+
+    STAMPED_METHODS = ("lookup_batch", "insert_batch")
+    STAMPS = ("table_version", "stage_version")
+
+    def check(self, module: ModuleInfo) -> Iterator[Finding]:
+        for node in ast.walk(module.tree):
+            if not (isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute)):
+                continue
+            if node.func.attr not in self.STAMPED_METHODS:
+                continue
+            recv = dotted(node.func.value) or ""
+            if "cache" not in recv.split(".")[-1].lower():
+                continue
+            kws = {kw.arg for kw in node.keywords}
+            missing = [s for s in self.STAMPS if s not in kws]
+            if missing:
+                yield self.finding(
+                    module, node,
+                    f"`{recv}.{node.func.attr}(...)` without "
+                    f"{'/'.join(s + '=' for s in missing)} — unstamped cache "
+                    f"traffic defeats exact invalidation",
+                )
+        # the lock-dispatch scan, scoped to the cache package (which the
+        # lock-dispatch rule's serving-package list predates)
+        if _in_packages(module.rel, ("cache",)):
+            scoped = LockDispatchRule()
+            scoped.PACKAGES = ("cache",)
+            for f in scoped.check(module):
+                yield Finding(
+                    self.rule_id, f.file, f.line, f.col,
+                    f.message + " (route-cache critical section)", self.hint,
+                )
+
+
+@register
 class ThreadDisciplineRule(Rule):
     rule_id = "thread-discipline"
     description = (

@@ -31,7 +31,7 @@ from repro.configs import ARCHITECTURES, get_config
 from repro.launch.hlo_analysis import parse_collectives, roofline_terms
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import SHAPES, cache_structs, input_specs, variant_for_shape
-from repro.launch.traffic import analytic_hbm_bytes
+from repro.launch.hbm_model import analytic_hbm_bytes
 from repro.launch.state_specs import opt_state_structs
 from repro.models import model as M
 from repro.models.params import param_structs

@@ -55,6 +55,7 @@ def build_router(
     tracer=None,
     bus=None,
     quality=None,
+    cache=None,
     cleanups=None,
 ):
     """Gateway over the refined table; `backend` picks the index scorer.
@@ -121,7 +122,13 @@ def build_router(
         tracer=tracer,
         bus=bus,
         quality=quality,
+        cache=cache,
     )
+    # purge version-dead cache entries eagerly on swap/stage_swap (lookup
+    # stamps already make stale serves impossible; this reclaims memory and
+    # emits the `cache_invalidated` event the runbook watches)
+    if cache is not None and bus is not None:
+        detach(cache.watch(bus))
     # demo timing should reflect the index path, not the mid-build fallback
     if not router.index.wait_ready(timeout_s=300.0):
         print(
@@ -170,6 +177,18 @@ def main(argv=None):
     ap.add_argument("--profile-daemons", action="store_true",
                     help="opt-in sampling wall-clock profiler over the "
                          "cadence daemons (exported at /profile)")
+    ap.add_argument("--route-cache", action="store_true",
+                    help="front route_batch with SemanticRouteCache: "
+                         "near-duplicate queries are served the cached "
+                         "top-K without paying embed-adjacent score+rerank "
+                         "(exact version-stamped invalidation; see "
+                         "repro.cache for the config tradeoffs)")
+    ap.add_argument("--cache-threshold", type=float, default=0.95,
+                    help="min cosine(stored query, new query) to serve a "
+                         "cached decision (the correctness knob)")
+    ap.add_argument("--cache-capacity", type=int, default=65536,
+                    help="retained key slots; one decision occupies "
+                         "n_tables (8) slots, LRU-evicted beyond this")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -182,13 +201,22 @@ def main(argv=None):
     quality = QualityMonitor(QualityConfig(drift_every=4),
                              registry=get_registry(), bus=bus)
     cleanups = []
+    cache = None
+    if args.route_cache:
+        from repro.cache import CacheConfig, SemanticRouteCache
+
+        cache = SemanticRouteCache(
+            CacheConfig(threshold=args.cache_threshold,
+                        capacity=args.cache_capacity, seed=args.seed),
+            metrics=get_registry(), bus=bus,
+        )
 
     print("== building tool benchmark + OATS control plane ==")
     bench = make_metatool_like(seed=args.seed, n_tools=args.n_tools, n_queries=args.n_queries)
     router, pipe = build_router(
         bench, args.stage, backend=args.backend, num_tools=args.num_tools,
         seed=args.seed, tracer=tracer, bus=bus, quality=quality,
-        cleanups=cleanups,
+        cache=cache, cleanups=cleanups,
     )
     print(f"== index backend: {args.backend} over {len(router.db)} tools ==")
 
@@ -319,6 +347,9 @@ def _serve_body(args, bench, router, pipe, bus, tracer, quality, monitor):
     )
     print(f"outcome log: {len(router.outcome_log)} events (feeds the next cron refinement)")
     print(f"index stats: {router.index.stats}")
+    if router.cache is not None:
+        print(f"route cache: hit_rate={router.cache.hit_rate():.3f} "
+              f"stats={router.cache.stats}")
     print(f"health: {monitor.snapshot()['status']} | bus events: {bus.counts()}")
     q = quality.summary()
     drift = q["drift_score"]

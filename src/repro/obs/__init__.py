@@ -74,7 +74,7 @@ route_requests_total (counter)
     Queries routed, summed over batches.
 route_batches_total (counter)
     `route_batch` calls served.
-route_phase_ms{phase=embed|adapter|score|rerank|assemble} (histogram)
+route_phase_ms{phase=embed|cache|adapter|score|rerank|assemble} (histogram)
     Per-batch wall duration of each serving phase, monotonic clock.
 route_batch_ms (histogram)
     End-to-end per-batch duration (sum of phases + overhead).
@@ -84,6 +84,21 @@ route_table_version / route_stage_version (gauge)
     Versions stamped on the most recent batch.
 route_outcomes_dropped_total (counter)
     Outcome-ring overwrites in `record_outcome` (undrained router).
+route_cache_hits_total / route_cache_misses_total (counter)
+    `SemanticRouteCache` lookup outcomes (a hit = cosine >= threshold on
+    a live-stamped entry); hit ratio also exported directly.
+route_cache_hit_ratio (gauge)
+    Lifetime hits / (hits + misses) — the runbook's headline cache dial.
+route_cache_size (gauge)
+    Retained key slots (one decision occupies `n_tables` slots).
+route_cache_evictions_total (counter)
+    LRU slots dropped past `capacity`.
+route_cache_invalidated_total (counter)
+    Entries purged on version-stamp mismatch (swap/rollback/stage churn).
+route_cache_stale_served_total (counter)
+    Gateway-tripwire demotions: a cache hit whose stamps no longer match
+    the live `(table_version, stage_version)` at serve time. MUST stay 0
+    (the ``cache_staleness`` SLO and cache_bench's churn gate enforce it).
 index_served_total{path=index|exact} (counter)
     Batches served by the built backend vs the exact dense fallback
     (fallback-serving windows during rebuilds).
@@ -144,6 +159,10 @@ slo_burn / serve — slo, sli, burn (+threshold_ms, p99_ms, p99_exemplar)
     (``sli`` is the SLI kind — latency|ratio|rate).
 slo_recovered / serve — slo, sli
     The SLO's next evaluation saw the breach gone.
+cache_invalidated / serve — table_version, stage_version, purged, reason
+    `SemanticRouteCache` purged >=1 version-stamp-mismatched entries
+    (eager path via `cache.watch(bus)`; lazy lookup purges count in
+    ``route_cache_invalidated_total`` without an event).
 quality_drift / serve — score, threshold, table_version
     The query-population EWMA left the live table's population stats
     (rising edge only; re-arms when the score falls back under).

@@ -152,6 +152,17 @@ def default_slos() -> Tuple[SLO, ...]:
             ),
             max_per_hour=12.0,
         ),
+        SLO(
+            name="cache_staleness",
+            kind="rate",
+            description="route-cache entries served from a dead snapshot "
+                        "stay at zero (the gateway tripwire re-checks every "
+                        "hit's (table_version, stage_version) stamps against "
+                        "the live pair and demotes mismatches to misses, so "
+                        "any count here means the stamp discipline broke)",
+            event_keys=("route_cache_stale_served_total",),
+            max_per_hour=1.0,
+        ),
     )
 
 

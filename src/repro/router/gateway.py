@@ -83,7 +83,7 @@ __all__ = [
     "hot_path_jits",
 ]
 
-PHASES = ("embed", "adapter", "score", "rerank", "assemble")
+PHASES = ("embed", "cache", "adapter", "score", "rerank", "assemble")
 
 
 def hot_path_jits() -> "OrderedDict[str, Callable]":
@@ -131,6 +131,11 @@ class _GatewayInstruments:
         # gap means the router is guessing) — recorded via record_many, one
         # vectorized pass per batch, so per-query cost stays O(1/batch)
         self.score_gap = registry.histogram("route_score_gap")
+        # tripwire: cache entries whose version stamps failed the gateway's
+        # independent re-check against the live pair. Such entries are
+        # demoted to misses (never served), so any non-zero value means a
+        # cache bug was caught — the cache_staleness SLO holds this at 0.
+        self.cache_stale = registry.counter("route_cache_stale_served_total")
 
 
 @dataclasses.dataclass
@@ -144,6 +149,10 @@ class RouteResult:
     # table_version it fully determines the scores (the learning plane's
     # StageGuard keys its shadow windows on it)
     stage_version: int = 0
+    # True when this result was served from the SemanticRouteCache (its
+    # tools/scores were computed by an earlier batch under the SAME
+    # (table_version, stage_version) pair reported above)
+    cache_hit: bool = False
 
 
 @dataclasses.dataclass
@@ -178,6 +187,7 @@ class SemanticRouter:
         tracer: Optional["RouteTracer"] = None,  # repro.obs.trace
         bus: Optional["EventBus"] = None,  # repro.obs.events
         quality: Optional["QualityMonitor"] = None,  # repro.obs.quality
+        cache: Optional["SemanticRouteCache"] = None,  # repro.cache
     ):
         self.db = db
         self.embed_fn = embed_fn
@@ -241,6 +251,17 @@ class SemanticRouter:
         # streaming quality observability (repro.obs.quality): route_batch
         # feeds it raw query embeddings for label-free drift detection
         self._quality = quality
+        # near-duplicate route cache (repro.cache): probed after embed
+        # (keys are embedding-space), so a hit skips the index backend and
+        # the Stage-2 re-ranker for its row. Wire `cache.watch(bus)` at the
+        # launcher for eager invalidation on swap/stage_swap events.
+        self._cache = cache
+
+    @property
+    def cache(self):
+        """The attached SemanticRouteCache, if any (read-only view for
+        health surfaces and launch summaries)."""
+        return self._cache
 
     def close(self) -> None:
         """Tear down a retiring router (idempotent).
@@ -384,85 +405,171 @@ class SemanticRouter:
         timed = tracing or obs is not None
         q = self._embed_batch(queries)  # [Q, D]
         t_embed = clock.perf() if timed else 0.0
+        # cache probe (repro.cache): keys are embedding-space, so it runs
+        # after embed and before everything a hit row gets to skip (index
+        # backend + Stage-2 re-ranker). Masked batches bypass the cache
+        # entirely — a cached decision computed without a mask must never
+        # answer a masked request. Lookups are judged against the live pair
+        # (db.table_version is the documented racy int read; every served
+        # entry's stamps are re-verified below) and probe with raw
+        # pre-adapter embeddings, so the stage_version stamp covers adapter
+        # promotions too.
+        cache = self._cache
+        use_cache = cache is not None and candidate_masks is None
+        if use_cache:
+            tv_live = self.db.table_version
+            cached = cache.lookup_batch(
+                q, table_version=tv_live, stage_version=stage_version
+            )
+            # tripwire, independent of the cache's own stamp check: any
+            # entry whose versions differ from the live pair is demoted to
+            # a miss (never served) and counted —
+            # route_cache_stale_served_total must stay 0 (cache_staleness
+            # SLO; benchmarks/cache_bench.py gates it in CI)
+            stale = 0
+            for j, e in enumerate(cached):
+                if e is not None and (
+                    e.table_version != tv_live
+                    or e.stage_version != stage_version
+                ):
+                    cached[j] = None
+                    stale += 1
+            if stale and obs is not None:
+                obs.cache_stale.inc(stale)
+            miss_idx = [j for j, e in enumerate(cached) if e is None]
+        else:
+            cached = []
+            miss_idx = list(range(n_q))
+        t_cache = clock.perf() if timed else 0.0
+        n_miss = len(miss_idx)
         # swap_table asserts the table shape is invariant, so the tool count
         # is stable across versions and safe to read without a snapshot
         n_t = len(self.db)
         rerank = stages.has_reranker
         c = min(self.k * self.candidate_multiplier, n_t) if rerank else min(self.k, n_t)
         k_eff = min(self.k, c)  # tables smaller than k yield short results
-        # pad the batch up to a power-of-two bucket so the jitted scoring
-        # programs compile once per bucket, not once per distinct Q (the
-        # scheduler's admission batches vary with free slots; a retrace is
-        # a multi-ms stall against the 10 ms budget). Pad rows are zero
-        # queries whose results are sliced away below.
-        n_pad = pad_amount(n_q)
-        if n_pad:
-            q_in = np.concatenate([q, np.zeros((n_pad, q.shape[1]), np.float32)])
-            queries_in = list(queries) + [np.zeros(0, np.int64)] * n_pad
-            masks_in = None if candidate_masks is None else np.concatenate(
-                [candidate_masks, np.ones((n_pad, n_t), candidate_masks.dtype)]
+        if n_miss:
+            # the scoring path sees only the miss rows: a mostly-hit batch
+            # pays the index backend and re-ranker for its misses alone
+            if n_miss == n_q:
+                q_miss, queries_miss, masks_miss = q, queries, candidate_masks
+            else:
+                q_miss = q[miss_idx]
+                queries_miss = [queries[j] for j in miss_idx]
+                masks_miss = None  # masked batches never reach this branch
+            # pad the miss block up to a power-of-two bucket so the jitted
+            # scoring programs compile once per bucket, not once per
+            # distinct Q (the scheduler's admission batches vary with free
+            # slots; a retrace is a multi-ms stall against the 10 ms
+            # budget). Pad rows are zero queries whose results are sliced
+            # away below.
+            n_pad = pad_amount(n_miss)
+            if n_pad:
+                q_in = np.concatenate(
+                    [q_miss, np.zeros((n_pad, q.shape[1]), np.float32)]
+                )
+                queries_in = list(queries_miss) + [np.zeros(0, np.int64)] * n_pad
+                masks_in = None if masks_miss is None else np.concatenate(
+                    [masks_miss, np.ones((n_pad, n_t), masks_miss.dtype)]
+                )
+            else:
+                q_in, queries_in, masks_in = q_miss, queries_miss, masks_miss
+            # adapter head (query-side only) runs BEFORE the index backend —
+            # the tool table is untouched, so any built IVF/Pallas index
+            # stays valid across adapter promotions — and on the PADDED
+            # block, so the jitted head compiles once per power-of-two
+            # bucket like the scoring path (a retrace per distinct Q is a
+            # multi-ms stall against the budget). pool_selector below keeps
+            # seeing the raw encoder embedding `q`: pool affinity must not
+            # flip on stage promotions/demotions.
+            q_in = stages.adapt_queries(q_in)
+            t_adapter = clock.perf() if timed else 0.0
+            # the index layer scores the batch against an atomic
+            # (version, table) snapshot — the reported table_version and
+            # the scores come from the SAME table even if swap_table lands
+            # mid-batch, whichever backend (or the exact mid-rebuild
+            # fallback) served it
+            cand_scores_np, cand_idx_np, table_version = self.index.topk(
+                q_in, c, masks_in
             )
+            t_score = clock.perf() if timed else 0.0
+            if rerank:
+                feats = stages.featurizer.features(q_in, queries_in, cand_idx_np, cand_scores_np)
+                top_idx, top_scores = reranker_lib.rerank_topk_scored(
+                    stages.mlp_params,
+                    jnp.asarray(feats),
+                    jnp.asarray(cand_idx_np),
+                    k_eff,
+                    valid=jnp.asarray(cand_scores_np > NEG_INF / 2),
+                )
+            else:
+                top_idx, top_scores = cand_idx_np[:, :k_eff], cand_scores_np[:, :k_eff]
+            top_idx = np.asarray(top_idx)[:n_miss]
+            top_scores = np.asarray(top_scores)[:n_miss]
         else:
-            q_in, queries_in, masks_in = q, queries, candidate_masks
-        # adapter head (query-side only) runs BEFORE the index backend — the
-        # tool table is untouched, so any built IVF/Pallas index stays valid
-        # across adapter promotions — and on the PADDED block, so the jitted
-        # head compiles once per power-of-two bucket like the scoring path
-        # (a retrace per distinct Q is a multi-ms stall against the budget).
-        # pool_selector below keeps seeing the raw encoder embedding `q`:
-        # pool affinity must not flip on stage promotions/demotions.
-        q_in = stages.adapt_queries(q_in)
-        t_adapter = clock.perf() if timed else 0.0
-        # the index layer scores the batch against an atomic (version, table)
-        # snapshot — the reported table_version and the scores come from the
-        # SAME table even if swap_table lands mid-batch, whichever backend
-        # (or the exact mid-rebuild fallback) served it
-        cand_scores_np, cand_idx_np, table_version = self.index.topk(
-            q_in, c, masks_in
-        )
-        t_score = clock.perf() if timed else 0.0
-        if rerank:
-            feats = stages.featurizer.features(q_in, queries_in, cand_idx_np, cand_scores_np)
-            top_idx, top_scores = reranker_lib.rerank_topk_scored(
-                stages.mlp_params,
-                jnp.asarray(feats),
-                jnp.asarray(cand_idx_np),
-                k_eff,
-                valid=jnp.asarray(cand_scores_np > NEG_INF / 2),
-            )
-        else:
-            top_idx, top_scores = cand_idx_np[:, :k_eff], cand_scores_np[:, :k_eff]
-        top_idx = np.asarray(top_idx)[:n_q]
-        top_scores = np.asarray(top_scores)[:n_q]
+            # every row hit: the adapter, index backend, and re-ranker are
+            # all skipped, and the batch reports the live pair the hits
+            # were verified against
+            t_adapter = t_score = t_cache
+            table_version = tv_live
+            top_idx = np.zeros((0, k_eff), np.int64)
+            top_scores = np.zeros((0, k_eff), np.float32)
         t_rank = clock.perf()
         latency_ms = (t_rank - t0) * 1e3 / n_q
+        # a mask can leave fewer than k candidates; those slots carry the
+        # NEG_INF sentinel and must not surface as selected tools
+        miss_tools: List[List[int]] = []
+        miss_scores: List[List[float]] = []
+        for m in range(n_miss):
+            valid_m = top_scores[m] > NEG_INF / 2
+            miss_tools.append([int(t) for t in top_idx[m][valid_m]])
+            miss_scores.append([float(s) for s in top_scores[m][valid_m]])
+        if use_cache and n_miss:
+            # fresh decisions enter the cache stamped with the versions
+            # that actually produced them: the topk snapshot's
+            # table_version plus the batch's stage snapshot — NOT tv_live,
+            # which a mid-batch swap may already have left behind
+            cache.insert_batch(
+                q_miss, miss_tools, miss_scores,
+                table_version=table_version, stage_version=stage_version,
+            )
         out = []
+        m = 0
         for j in range(n_q):
-            # a mask can leave fewer than k candidates; those slots carry the
-            # NEG_INF sentinel and must not surface as selected tools
-            valid_j = top_scores[j] > NEG_INF / 2
-            tools = [int(t) for t in top_idx[j][valid_j]]
+            e = cached[j] if use_cache else None
+            if e is not None:
+                tools, scores = list(e.tools), list(e.scores)
+                tv_j, hit = e.table_version, True
+            else:
+                tools, scores = miss_tools[m], miss_scores[m]
+                tv_j, hit = table_version, False
+                m += 1
             out.append(
                 RouteResult(
                     tools=tools,
-                    scores=[float(s) for s in top_scores[j][valid_j]],
+                    scores=scores,
                     latency_ms=latency_ms,
                     pool=self.pool_selector(q[j], tools),
-                    table_version=table_version,
+                    table_version=tv_j,
                     stage_version=stage_version,
+                    cache_hit=hit,
                 )
             )
         if timed:
             t_done = clock.perf()
-            # the rerank span only exists when the Stage-2 MLP actually ran;
-            # recording ~0 ms slice-only "reranks" would poison the p50
-            spans = [
-                ("embed", (t_embed - t0) * 1e3),
-                ("adapter", (t_adapter - t_embed) * 1e3),
-                ("score", (t_score - t_adapter) * 1e3),
-            ]
-            if rerank:
-                spans.append(("rerank", (t_rank - t_score) * 1e3))
+            # spans exist only for work that actually ran: the cache span
+            # only when a cache is attached, adapter/score only when misses
+            # reached the index, the rerank span only when the Stage-2 MLP
+            # actually ran — recording ~0 ms slice-only "reranks" (or
+            # all-hit "scores") would poison the p50
+            spans = [("embed", (t_embed - t0) * 1e3)]
+            if use_cache:
+                spans.append(("cache", (t_cache - t_embed) * 1e3))
+            if n_miss:
+                spans.append(("adapter", (t_adapter - t_cache) * 1e3))
+                spans.append(("score", (t_score - t_adapter) * 1e3))
+                if rerank:
+                    spans.append(("rerank", (t_rank - t_score) * 1e3))
             spans.append(("assemble", (t_done - t_rank) * 1e3))
             total_ms = (t_done - t0) * 1e3
             # trace BEFORE metrics: a sampled batch's trace id becomes the
@@ -473,8 +580,11 @@ class SemanticRouter:
             if tracing:
                 trace = self._tracer.record(
                     batch_size=n_q,
-                    bucket=n_q + n_pad,
-                    path=self.index.last_path(),
+                    # the bucket is what the jitted programs compiled for:
+                    # the padded MISS block (an all-hit batch never reached
+                    # them and reports bucket 0 under path "cache")
+                    bucket=(n_miss + n_pad) if n_miss else 0,
+                    path="cache" if not n_miss else self.index.last_path(),
                     table_version=table_version,
                     stage_version=stage_version,
                     spans=spans,

@@ -45,6 +45,7 @@ def test_registry_has_all_rules():
         "jit-static-scalar",
         "pow2-bucket",
         "lock-dispatch",
+        "cache-version-stamp",
         "thread-discipline",
         "kernel-contract",
         "obs-discipline",
@@ -214,6 +215,49 @@ def test_lock_dispatch_ignores_outside_packages_and_nested_defs(tmp_path):
         "        return jnp.asarray(q)\n"
     )
     assert _check(tmp_path, src2, "lock-dispatch", relpath="tools/mod.py") == []
+
+
+def test_cache_version_stamp_flags_unstamped_sites(tmp_path):
+    src = (
+        "def serve(cache, q, tools, scores, tv, sv):\n"
+        "    hit = cache.lookup_batch(q, table_version=tv)\n"  # missing stage
+        "    cache.insert_batch(q, tools, scores)\n"  # missing both
+        "    return hit\n"
+    )
+    found = _check(tmp_path, src, "cache-version-stamp")
+    assert len(found) == 2
+    assert "stage_version=" in found[0].message
+    assert "table_version=" in found[1].message
+
+
+def test_cache_version_stamp_allows_stamped_and_noncache(tmp_path):
+    # fully stamped call sites on a cache receiver: clean
+    src = (
+        "def serve(route_cache, q, tools, scores, tv, sv):\n"
+        "    hit = route_cache.lookup_batch(q, table_version=tv, stage_version=sv)\n"
+        "    route_cache.insert_batch(q, tools, scores, table_version=tv,\n"
+        "                             stage_version=sv)\n"
+        "    return hit\n"
+    )
+    assert _check(tmp_path, src, "cache-version-stamp") == []
+    # same method names on a non-cache receiver are someone else's API
+    src2 = "def f(store, q):\n    return store.lookup_batch(q)\n"
+    assert _check(tmp_path, src2, "cache-version-stamp") == []
+
+
+def test_cache_version_stamp_flags_dispatch_under_cache_lock(tmp_path):
+    src = (
+        "import jax.numpy as jnp\n"
+        "class C:\n"
+        "    def lookup(self, q):\n"
+        "        with self._lock:\n"
+        "            return jnp.asarray(q)\n"
+    )
+    found = _check(tmp_path, src, "cache-version-stamp", relpath="cache/mod.py")
+    assert len(found) == 1
+    assert "critical section" in found[0].message
+    # identical source outside cache/: this rule leaves it alone
+    assert _check(tmp_path, src, "cache-version-stamp", relpath="tools/mod.py") == []
 
 
 def test_obs_discipline_flags_raw_clocks_and_print(tmp_path):

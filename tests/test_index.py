@@ -182,7 +182,7 @@ def test_route_result_fields_consistent_across_backends(small_bench):
     agree on the ranking; scores always reproduce the final ranking."""
     expected_fields = {
         "tools", "scores", "latency_ms", "pool", "table_version",
-        "stage_version",
+        "stage_version", "cache_hit",
     }
     per_backend = {}
     for kind in BACKENDS:

@@ -16,7 +16,7 @@ from repro.configs import get_config
 from repro.launch.hlo_analysis import CollectiveStats, parse_collectives, roofline_terms
 from repro.launch.specs import SHAPES, input_specs, variant_for_shape
 from repro.launch.state_specs import opt_state_structs
-from repro.launch.traffic import analytic_hbm_bytes
+from repro.launch.hbm_model import analytic_hbm_bytes
 from repro.models import model as M
 from repro.models.config import reduced
 from repro.models.params import param_structs

@@ -359,6 +359,7 @@ def test_default_slos_cover_the_catalog_and_stay_quiet_without_data():
         "guard_rollback_rate",
         "drop_rate",
         "jit_retrace_rate",
+        "cache_staleness",
     ]
     reg = MetricsRegistry()
     engine = SLOEngine(TimeSeriesRing(reg), registry=reg)
